@@ -1,0 +1,46 @@
+"""Paper Fig. 2: sensitivity of collaborative inference to the confidence
+threshold.  Trains the Sequential strategy on the hard dataset (syn100,
+homogeneous clients), then sweeps the entropy threshold and records
+accuracy + client adoption ratio + mean entropy per split depth."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import make_dataset, run_strategy
+from repro.core.inference import H_CAP
+
+
+def run(rounds: int = 40, train_size: int = 1200, test_size: int = 384,
+        layers=(3, 4, 5), n_clients: int = 6, num_taus: int = 17,
+        dataset: str = "syn10", seed: int = 0) -> List[dict]:
+    """Paper Fig. 2 uses CIFAR-100; at this container's reduced training
+    budget the 100-class exits stay uniformly unconfident (H ~ ln 100), so
+    the sweep is demonstrated on the learnable 10-class stand-in where the
+    entropy gate actually discriminates (see EXPERIMENTS.md)."""
+    rows = []
+    ds = make_dataset(dataset, train_size, test_size, seed=seed)
+    # paper sweeps tau in [0, 4] at 0.05 granularity; we use a coarser grid
+    # over the same range (tau here is the ENTROPY threshold tau_H; the
+    # paper's conservativeness axis is H_CAP - tau_H, see DESIGN.md §1).
+    taus = np.linspace(0.0, H_CAP, num_taus)
+    for layer in layers:
+        splits = (layer,) * n_clients
+        ev = run_strategy(ds, "sequential", splits, rounds=rounds, seed=seed)
+        tr = ev["trainer"]
+        for tau in taus:
+            t0 = time.time()
+            ad = tr.evaluate_adaptive(*ds.test, tau=float(tau),
+                                      batch_size=256)
+            rows.append({
+                "table": "fig2_threshold", "dataset": dataset,
+                "layer": layer, "tau_entropy": round(float(tau), 3),
+                "tau_paper": round(float(H_CAP - tau), 3),
+                "acc": round(float(np.mean(ad["acc"])), 4),
+                "client_ratio": round(float(np.mean(ad["client_ratio"])), 4),
+                "mean_entropy": round(float(np.mean(ad["mean_entropy"])), 4),
+                "wall_s": round(time.time() - t0, 2),
+            })
+    return rows

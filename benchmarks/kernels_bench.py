@@ -1,0 +1,65 @@
+"""Kernel parity + latency micro-bench.  On this CPU container the Pallas
+kernels run in interpret mode, so wall-times are NOT TPU estimates — the
+benchmark's purpose is (a) parity vs the jnp oracle on bench-scale shapes and
+(b) a regression guard on call overhead."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import entropy_exit, flash_attention, rwkv_wkv
+from repro.kernels.ref import (entropy_exit_ref, flash_attention_ref,
+                               rwkv_wkv_ref)
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw)                     # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> List[dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    q = jnp.array(rng.normal(size=(1, 4, 128, 64)), jnp.float32)
+    k = jnp.array(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
+    v = jnp.array(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
+    t = _time(flash_attention, q, k, v, interpret=True)
+    err = float(jnp.abs(flash_attention(q, k, v, interpret=True)
+                        - flash_attention_ref(q, k, v)).max())
+    rows.append({"table": "kernels", "name": "flash_attention_128",
+                 "us_per_call": round(t, 1), "max_err": err})
+
+    x = jnp.array(rng.normal(size=(32, 8192)) * 2, jnp.float32)
+    t = _time(entropy_exit, x, 1.5, interpret=True)
+    H, _ = entropy_exit(x, 1.5, interpret=True)
+    Hr, _ = entropy_exit_ref(x, 1.5)
+    rows.append({"table": "kernels", "name": "entropy_exit_8k",
+                 "us_per_call": round(t, 1),
+                 "max_err": float(jnp.abs(H - Hr).max())})
+
+    r = jnp.array(rng.normal(size=(2, 128, 4, 32)), jnp.float32)
+    kk = jnp.array(rng.normal(size=(2, 128, 4, 32)), jnp.float32)
+    vv = jnp.array(rng.normal(size=(2, 128, 4, 32)), jnp.float32)
+    lw = -jnp.array(rng.uniform(0.05, 1.0, size=(2, 128, 4, 32)), jnp.float32)
+    u = jnp.array(rng.normal(size=(4, 32)), jnp.float32)
+    t = _time(rwkv_wkv, r, kk, vv, lw, u, interpret=True)
+    y = rwkv_wkv(r, kk, vv, lw, u, interpret=True)
+
+    def flat(x):
+        return jnp.moveaxis(x, 2, 1).reshape(8, 128, 32)
+
+    yr = rwkv_wkv_ref(flat(r), flat(kk), flat(vv), flat(lw),
+                      jnp.broadcast_to(u[None], (2, 4, 32)).reshape(8, 32))
+    yr = jnp.moveaxis(yr.reshape(2, 4, 128, 32), 1, 2)
+    rows.append({"table": "kernels", "name": "rwkv_wkv_128",
+                 "us_per_call": round(t, 1),
+                 "max_err": float(jnp.abs(y - yr).max())})
+    return rows

@@ -1,0 +1,171 @@
+"""Roofline analysis (deliverable g): reads the dry-run artifacts
+(experiments/artifacts/*.jsonl) and derives, per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s          [s]
+    memory term     = HLO_bytes_per_device / HBM_bw               [s]
+    collective term = collective_bytes_per_device / ICI link bw   [s]
+
+HLO numbers are the trip-count-aware per-device totals from
+``repro.launch.hlo_analysis`` (XLA's cost_analysis counts scan bodies once —
+see that module).  MODEL_FLOPS = 6·N·D (train) / 2·N·D (prefill/decode),
+N = active params (MoE counts shared + top_k/E of routed experts), D =
+processed tokens; the ratio MODEL_FLOPS / (HLO_FLOPs x chips) exposes
+replicated or remat-wasted compute.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+import jax
+
+from repro import configs as configs_mod
+from repro.config import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16, SHAPES_BY_NAME)
+
+CHIPS = {"single_pod": 256, "multi_pod": 512}
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter / flops model
+# ---------------------------------------------------------------------------
+
+
+def param_counts(arch: str, shape_name: str) -> Dict[str, float]:
+    """(total, active) parameter counts from the abstract param tree."""
+    from repro.launch.dryrun import arch_config
+    from repro.launch.inputs import abstract_params
+
+    cfg = arch_config(arch, shape_name)
+    if cfg is None:
+        return {"total": 0, "active": 0}
+    params = abstract_params(cfg)
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        n = leaf.size
+        total += n
+        keys = [getattr(p, "key", "") for p in path if hasattr(p, "key")]
+        is_expert = (cfg.moe is not None
+                     and any(k in ("w_gate", "w_up", "w_down") for k in keys)
+                     and "ffn" in keys)
+        if is_expert and cfg.moe.num_experts > 1:
+            active += n * cfg.moe.top_k / cfg.moe.num_experts
+        else:
+            active += n
+    return {"total": float(total), "active": float(active)}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    shape = SHAPES_BY_NAME[shape_name]
+    pc = param_counts(arch, shape_name)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * pc["active"] * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * pc["active"] * tokens
+    # decode: one token per sequence
+    return 2.0 * pc["active"] * shape.global_batch
+
+
+# ---------------------------------------------------------------------------
+# terms
+# ---------------------------------------------------------------------------
+
+
+def terms(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    ana = rec.get("analysis", {})
+    chips = CHIPS[rec["mesh"]]
+    f = ana.get("flops_per_device", 0.0)
+    b = ana.get("hbm_bytes_per_device", 0.0)
+    c = ana.get("collective_total_per_device", 0.0)
+    compute_s = f / PEAK_FLOPS_BF16
+    memory_s = b / HBM_BW
+    coll_s = c / ICI_BW
+    dom = max((("compute", compute_s), ("memory", memory_s),
+               ("collective", coll_s)), key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"])
+    ratio = mf / (f * chips) if f else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "dominant": dom, "model_flops": mf,
+        "useful_ratio": ratio,
+        "peak_mem_gb": rec.get("memory", {}).get("peak_memory_bytes", 0) / 2**30,
+        "grad_mode": rec.get("grad_mode", ""),
+    }
+
+
+MOVE_HINTS = {
+    "compute": "shard the dominant matmuls over more of the mesh (raise "
+               "useful_ratio) or drop remat recompute",
+    "memory": "fuse elementwise chains / reduce activation re-materialization"
+              " and keep weights resident (bigger per-chip batch)",
+    "collective": "re-shard to contraction-friendly axes (Megatron-style "
+                  "head/ffn sharding) so activations stop crossing ICI "
+                  "every projection",
+}
+
+
+def load(path: str) -> List[dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows
+
+
+def table(path: str, mesh: str = "single_pod") -> List[dict]:
+    out = []
+    for rec in load(path):
+        if rec.get("mesh") != mesh:
+            continue
+        t = terms(rec)
+        if t:
+            t["hint"] = MOVE_HINTS[t["dominant"]]
+            out.append(t)
+        elif rec.get("status") == "skipped":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec["mesh"], "dominant": "skipped",
+                        "hint": rec.get("reason", "")})
+    return out
+
+
+def run(path: str = "experiments/artifacts/dryrun_baseline.jsonl",
+        mesh: str = "single_pod") -> List[dict]:
+    rows = []
+    for t in table(path, mesh):
+        rows.append({"table": "roofline", **{
+            k: (round(v, 6) if isinstance(v, float) else v)
+            for k, v in t.items() if k != "hint"}})
+    return rows
+
+
+def markdown(path: str, mesh: str = "single_pod") -> str:
+    rows = table(path, mesh)
+    lines = [
+        f"| arch | shape | compute s | memory s | collective s | dominant | "
+        f"useful flops ratio | peak mem/dev GB |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for t in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if t["dominant"] == "skipped":
+            lines.append(f"| {t['arch']} | {t['shape']} | — | — | — | "
+                         f"skipped | — | — |")
+            continue
+        lines.append(
+            f"| {t['arch']} | {t['shape']} | {t['compute_s']:.3g} | "
+            f"{t['memory_s']:.3g} | {t['collective_s']:.3g} | "
+            f"**{t['dominant']}** | {t['useful_ratio']:.3f} | "
+            f"{t['peak_mem_gb']:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    p = sys.argv[1] if len(sys.argv) > 1 else \
+        "experiments/artifacts/dryrun_baseline.jsonl"
+    print(markdown(p))

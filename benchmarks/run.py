@@ -1,0 +1,90 @@
+"""Benchmark orchestrator — one benchmark per paper table/figure plus the
+roofline readout.  Prints ``name,us_per_call,derived`` CSV (us_per_call =
+wall time per cell; derived = the headline metric) and writes full JSON rows
+to experiments/artifacts/.
+
+  PYTHONPATH=src python -m benchmarks.run                # standard
+  PYTHONPATH=src python -m benchmarks.run --quick        # CI-size
+  PYTHONPATH=src python -m benchmarks.run --only table3_homo
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _emit(rows, csv_rows):
+    for r in rows:
+        name = r.get("name") or "/".join(
+            str(r[k]) for k in ("table", "dataset", "method", "layer")
+            if k in r)
+        us = r.get("us_per_call", r.get("wall_s", 0) * 1e6)
+        derived = r.get("derived", r.get("server_acc", r.get("acc",
+                        r.get("dominant", r.get("max_err", "")))))
+        csv_rows.append(f"{name},{us},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    ap.add_argument("--artifacts", default="experiments/artifacts")
+    args = ap.parse_args()
+
+    os.makedirs(args.artifacts, exist_ok=True)
+    kw = (dict(rounds=4, train_size=512, test_size=256, datasets=("syn10",))
+          if args.quick else dict())
+    fig2_kw = (dict(rounds=4, train_size=512, test_size=256, layers=(3,),
+                    num_taus=9) if args.quick else dict())
+
+    all_rows, csv_rows = [], ["name,us_per_call,derived"]
+    t0 = time.time()
+
+    def want(name):
+        return not args.only or args.only == name
+
+    if want("table3_homo"):
+        from benchmarks import table3_homo
+        rows = table3_homo.run(**kw)
+        all_rows += rows
+        _emit(rows, csv_rows)
+    if want("table4_hetero"):
+        from benchmarks import table4_hetero
+        rows = table4_hetero.run(**kw)
+        all_rows += rows
+        _emit(rows, csv_rows)
+    if want("fig2_threshold"):
+        from benchmarks import fig2_threshold
+        rows = fig2_threshold.run(**fig2_kw)
+        all_rows += rows
+        _emit(rows, csv_rows)
+    if want("kernels"):
+        from benchmarks import kernels_bench
+        rows = kernels_bench.run()
+        all_rows += rows
+        _emit(rows, csv_rows)
+    if want("roofline"):
+        from benchmarks import roofline
+        path = os.path.join(args.artifacts, "dryrun_baseline.jsonl")
+        if os.path.exists(path):
+            rows = roofline.run(path)
+            all_rows += rows
+            for r in rows:
+                csv_rows.append(
+                    f"roofline/{r['arch']}/{r['shape']},0,{r['dominant']}")
+        else:
+            csv_rows.append("roofline,-,missing (run repro.launch.dryrun)")
+
+    out = os.path.join(args.artifacts, "bench_results.json")
+    with open(out, "w") as f:
+        json.dump(all_rows, f, indent=1)
+    print("\n".join(csv_rows))
+    print(f"# total wall {time.time() - t0:.1f}s; rows -> {out}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

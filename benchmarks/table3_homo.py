@@ -1,0 +1,41 @@
+"""Paper Table III: homogeneous client models.  12 clients, all at the same
+end layer (3/4/5), x {Sequential, Averaging, Centralized, Distributed} x
+{syn10, syn100, synstl}.  Emits one row per (method, location, dataset,
+layer) cell."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import make_dataset, mean_by_depth, run_strategy
+
+METHODS = ("sequential", "averaging", "centralized", "distributed")
+
+
+def run(rounds: int = 40, train_size: int = 1200, test_size: int = 384,
+        datasets=("syn10", "syn100"), layers=(3, 4, 5), n_clients: int = 6,
+        seed: int = 0) -> List[dict]:
+    rows = []
+    for ds_name in datasets:
+        ds = make_dataset(ds_name, train_size, test_size, seed=seed)
+        for layer in layers:
+            splits = (layer,) * n_clients
+            for method in METHODS:
+                t0 = time.time()
+                ev = run_strategy(ds, method,
+                                  splits if method != "centralized"
+                                  else (layer,) * n_clients,
+                                  rounds=rounds, seed=seed)
+                if method == "centralized":
+                    client, server = ev["client_acc"][0], ev["server_acc"][0]
+                else:
+                    by = mean_by_depth(ev, splits)[layer]
+                    client, server = by["client"], by["server"]
+                rows.append({
+                    "table": "table3_homo", "dataset": ds_name,
+                    "method": method, "layer": layer,
+                    "server_acc": round(server, 4),
+                    "client_acc": round(client, 4),
+                    "wall_s": round(time.time() - t0, 1),
+                })
+    return rows

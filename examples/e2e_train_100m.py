@@ -1,0 +1,93 @@
+"""End-to-end driver: train a ~100M-parameter transformer with the fused
+SPMD Hetero-SplitEE step for a few hundred steps on synthetic structured LM
+data, with cosine LR, checkpointing, and per-boundary exit-loss reporting.
+
+Defaults are sized for this CPU container (~100M params, 300 steps).  On a
+real TPU mesh the identical step runs under the production shardings
+(launch/dryrun.py proves lowering for every assigned arch x shape).
+
+  PYTHONPATH=src python examples/e2e_train_100m.py --steps 300
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_pytree
+from repro.config import (HeteroProfile, ModelConfig, OptimizerConfig,
+                          SplitEEConfig, TrainConfig)
+from repro.core.spmd import (StepConfig, boundary_ids_for_batch,
+                             make_train_step)
+from repro.data.synthetic import SyntheticLMDataset
+from repro.models.backbone import init_backbone
+from repro.optim import adam_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=640)
+    ap.add_argument("--layers", type=int, default=12)
+    ap.add_argument("--vocab", type=int, default=32000)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-mode", default="eq1", choices=["eq1", "sum"])
+    ap.add_argument("--checkpoint", default="experiments/artifacts/e2e_100m")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    L = args.layers
+    cfg = ModelConfig(
+        name="e2e-100m", arch_type="dense", num_layers=L,
+        d_model=args.d_model, num_heads=args.d_model // 64,
+        num_kv_heads=max(1, args.d_model // 128), d_ff=4 * args.d_model,
+        vocab_size=args.vocab, exit_layers=(L // 4, L // 2, 3 * L // 4),
+        dtype=jnp.float32, param_dtype=jnp.float32)
+    profile = HeteroProfile(
+        split_layers=(L // 4,) * 4 + (L // 2,) * 4 + (3 * L // 4,) * 4)
+
+    sc = StepConfig(
+        model=cfg, splitee=SplitEEConfig(profile=profile),
+        train=TrainConfig(optimizer=OptimizerConfig(
+            lr=args.lr, total_steps=args.steps, warmup_steps=20,
+            schedule="cosine")),
+        grad_mode=args.grad_mode)
+
+    params = init_backbone(jax.random.PRNGKey(0), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {L}L d={args.d_model} vocab={args.vocab}  "
+          f"params={n_params / 1e6:.1f}M  grad_mode={args.grad_mode}")
+    print(f"hetero profile (12 clients): {profile.split_layers}")
+
+    opt = adam_init(params, sc.train.optimizer)
+    step_fn = jax.jit(make_train_step(sc))
+    ds = SyntheticLMDataset(vocab_size=args.vocab, seq_len=args.seq,
+                            structure=0.9, seed=0)
+    sids = boundary_ids_for_batch(profile, cfg, args.batch)
+
+    t0, losses = time.time(), []
+    for step, (toks, labels) in enumerate(ds.batches(args.batch, args.steps)):
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels),
+                 "split_ids": sids}
+        params, opt, m = step_fn(params, opt, batch)
+        losses.append(float(m["server_loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            cl = " ".join(f"b{i}={float(m[f'client_loss/b{i}']):.3f}"
+                          for i in range(3))
+            tok_s = (step + 1) * args.batch * args.seq / (time.time() - t0)
+            print(f"step {step:4d}  server={losses[-1]:.4f}  {cl}  "
+                  f"lr={float(m['lr']):.2e}  {tok_s:,.0f} tok/s")
+
+    print(f"\nloss: first={losses[0]:.4f}  last={np.mean(losses[-10:]):.4f}")
+    if args.checkpoint:
+        save_pytree(args.checkpoint, {"params": params},
+                    metadata={"steps": args.steps,
+                              "final_loss": float(np.mean(losses[-10:]))})
+        print(f"checkpoint -> {args.checkpoint}.npz")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: Hetero-SplitEE in ~60 seconds on CPU.
+
+Three heterogeneous clients (cut layers 1/2/3 of a 4-layer net) train one
+shared model collaboratively with the Averaging strategy (paper Alg. 2),
+then serve with the entropy-gated early exit (Alg. 3).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
+from repro.core.splitee import MLPSplitModel
+from repro.core.strategies import HeteroTrainer
+from repro.data.pipeline import ClientPartitioner
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n, d, classes = 3000, 32, 5
+    centers = rng.normal(size=(classes, d)) * 1.5
+    y = rng.integers(0, classes, n).astype(np.int32)
+    x = (centers[y] + rng.normal(size=(n, d))).astype(np.float32)
+    train, test = (x[:2400], y[:2400]), (x[2400:], y[2400:])
+
+    model = MLPSplitModel(in_dim=d, hidden=64, num_classes=classes,
+                          num_layers=4, seed=0)
+    profile = HeteroProfile(split_layers=(1, 2, 3))   # heterogeneous cuts
+    clients = ClientPartitioner(3, seed=0).split(*train)
+
+    trainer = HeteroTrainer(
+        model,
+        SplitEEConfig(profile=profile, strategy="averaging"),
+        OptimizerConfig(lr=3e-3, total_steps=60),
+        clients, batch_size=64)
+    trainer.run(rounds=40, local_epochs=1, log_every=10)
+
+    ev = trainer.evaluate(*test)
+    print("\nper-client accuracy (cut layers 1/2/3):")
+    print("  client-side exits:", [f"{a:.3f}" for a in ev["client_acc"]])
+    print("  server-side      :", [f"{a:.3f}" for a in ev["server_acc"]])
+
+    print("\nadaptive inference (exit iff entropy < tau):")
+    for tau in (0.1, 0.5, 1.0):
+        ad = trainer.evaluate_adaptive(*test, tau=tau)
+        print(f"  tau={tau:.1f}  acc={np.mean(ad['acc']):.3f}  "
+              f"client-ratio={np.mean(ad['client_ratio']):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Minimal sharding-aware pytree checkpointing (no orbax in this container).
+
+Arrays are gathered to host (``jax.device_get`` fetches fully-replicated or
+addressable shards; on multi-host deployments call under
+``jax.experimental.multihost_utils`` gather first), flattened by key-path and
+stored in a single ``.npz`` plus a JSON manifest for structure and dtypes.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)
+    flat, treedef = leaves_with_paths
+    keyed = {}
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.name == "bfloat16":     # npz cannot store ml_dtypes
+            arr = arr.astype(np.float32)     # lossless widening; manifest +
+        keyed[key] = arr                     # `like` dtype restore narrows
+    return keyed, treedef
+
+
+def save_pytree(path: str, tree: Any, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    keyed, _ = _flatten(tree)
+    np.savez(path + ".npz", **keyed)
+    manifest = {
+        "keys": sorted(keyed.keys()),
+        "dtypes": {k: str(v.dtype) for k, v in keyed.items()},
+        "shapes": {k: list(v.shape) for k, v in keyed.items()},
+        "metadata": metadata or {},
+    }
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (arrays replaced by loaded
+    values; dtypes cast to match ``like``)."""
+    data = np.load(path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for keypath, leaf in flat:
+        key = "/".join(str(p) for p in keypath)
+        arr = data[key]
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)

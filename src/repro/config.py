@@ -1,0 +1,255 @@
+"""Configuration dataclasses for the repro framework.
+
+Everything the launcher, the models and the Hetero-SplitEE core consume is
+described by the frozen dataclasses below.  Configs are plain data — hashable,
+printable, and safe to close over in jit'd functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Sub-configs for architecture families
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts FFN configuration."""
+
+    num_experts: int
+    top_k: int
+    d_expert: int                       # hidden dim of each routed expert
+    num_shared_experts: int = 0         # DeepSeek-style always-on shared expert(s)
+    d_shared_expert: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001    # load-balance loss weight
+    router_dtype: Any = jnp.float32
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek Multi-head Latent Attention configuration."""
+
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """State-space / linear-attention block configuration (Mamba2, RWKV6)."""
+
+    kind: str = "mamba2"               # "mamba2" | "rwkv6"
+    d_state: int = 64                  # SSM state dim per head
+    d_conv: int = 4                    # depthwise conv width (mamba)
+    expand: int = 2                    # inner expansion factor
+    head_dim: int = 64                 # SSD head dim
+    chunk_size: int = 256              # chunked-scan block length
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One architecture.  ``block_pattern`` gives the per-layer block kind;
+    it has length ``num_layers`` and entries in
+    {"attn", "mla", "mamba2", "rwkv6", "shared_attn"} for the mixer and the
+    FFN kind is chosen by ``ffn_pattern`` entries in {"mlp", "moe", "none"}.
+    """
+
+    name: str
+    arch_type: str                     # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                  # 0 -> d_model // num_heads
+    block_pattern: Tuple[str, ...] = ()    # defaults to all-"attn"
+    ffn_pattern: Tuple[str, ...] = ()      # defaults to all-"mlp"
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rope_theta: float = 10000.0
+    use_qkv_bias: bool = False
+    use_mlp_bias: bool = False
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    sliding_window: Optional[int] = None   # tokens; None = full attention
+    act: str = "silu"                  # mlp activation: silu (SwiGLU) | gelu
+    cross_attention: bool = False      # enc-dec decoder (whisper)
+    cross_source_len: int = 1500       # design-limit source length (whisper)
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.bfloat16
+    # --- Hetero-SplitEE ---
+    exit_layers: Tuple[int, ...] = ()  # layers after which an exit head sits
+    # citation for the assigned-architecture pool
+    source: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if not self.block_pattern:
+            object.__setattr__(self, "block_pattern", ("attn",) * self.num_layers)
+        if not self.ffn_pattern:
+            object.__setattr__(self, "ffn_pattern", ("mlp",) * self.num_layers)
+        assert len(self.block_pattern) == self.num_layers, self.name
+        assert len(self.ffn_pattern) == self.num_layers, self.name
+        for l in self.exit_layers:
+            assert 0 < l < self.num_layers, f"exit layer {l} out of range"
+
+    # -- derived ----------------------------------------------------------
+    @property
+    def q_heads_per_kv(self) -> int:
+        return max(1, self.num_heads // max(1, self.num_kv_heads))
+
+    def segments(self) -> Tuple[Tuple[int, int], ...]:
+        """Contiguous [start, end) layer ranges delimited by exit layers."""
+        bounds = [0, *sorted(self.exit_layers), self.num_layers]
+        return tuple((bounds[i], bounds[i + 1]) for i in range(len(bounds) - 1))
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Hetero-SplitEE configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HeteroProfile:
+    """Assignment of split points to client groups.
+
+    ``split_layers[g]`` is the cut layer l_i of client group ``g``.  In the
+    SPMD production step, group ``g`` owns the ``g``-th equal slice of the
+    ``data`` mesh axis.  In the paper-scale engines each entry is one client.
+    """
+
+    split_layers: Tuple[int, ...]
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.split_layers)
+
+    @property
+    def distinct_splits(self) -> Tuple[int, ...]:
+        return tuple(sorted(set(self.split_layers)))
+
+    def participation(self, layer: int) -> Tuple[int, ...]:
+        """Paper Eq. (1) participation set C_l = {i : l_i < l} (0-indexed
+        layer ``layer`` is *server-side* for client i iff l_i <= layer)."""
+        return tuple(i for i, li in enumerate(self.split_layers) if li <= layer)
+
+
+@dataclass(frozen=True)
+class SplitEEConfig:
+    """Hetero-SplitEE training configuration (paper §III)."""
+
+    profile: HeteroProfile
+    strategy: str = "averaging"        # "sequential" | "averaging"
+    server_lr_divisor: float = 0.0     # 0 -> auto: N for sequential, 1 for avg
+    aggregate_every: int = 1           # rounds between cross-layer aggregations
+    entropy_threshold: float = 1.0     # exit iff H < tau_H  (see DESIGN.md §1)
+
+    def resolved_server_lr_divisor(self) -> float:
+        if self.server_lr_divisor > 0:
+            return self.server_lr_divisor
+        return float(self.profile.num_groups) if self.strategy == "sequential" else 1.0
+
+
+# ---------------------------------------------------------------------------
+# Training / optimizer config (paper Table II defaults)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adam"
+    lr: float = 1e-3                   # eta_max
+    min_lr: float = 1e-6               # eta_min
+    schedule: str = "cosine"           # cosine annealing, warmup 0
+    warmup_steps: int = 0
+    total_steps: int = 600
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    state_dtype: Any = jnp.float32     # Adam m/v dtype (bf16 for huge models)
+    grad_clip: float = 0.0             # 0 = off
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    batch_size: int = 1024
+    seq_len: int = 0                   # 0 for image models
+    global_rounds: int = 600
+    local_epochs: int = 1
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    remat: str = "none"                # none | full | dots_saveable
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                          # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in INPUT_SHAPES}
+
+
+# ---------------------------------------------------------------------------
+# Mesh config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    multi_pod: bool = False
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (2, 16, 16) if self.multi_pod else (16, 16)
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.multi_pod else ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+# TPU v5e hardware constants used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

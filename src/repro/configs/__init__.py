@@ -1,0 +1,34 @@
+"""Architecture registry: the 10 assigned architectures + the paper's own
+ResNet-18.  Each module exposes ``config()`` (the exact assigned full config),
+``smoke()`` (a reduced same-family variant: <=4 layers, d_model<=512,
+<=4 experts) and ``profile()`` (the default Hetero-SplitEE client profile)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+ARCH_IDS = (
+    "phi3_medium_14b",
+    "minitron_8b",
+    "zamba2_1p2b",
+    "whisper_small",
+    "command_r_35b",
+    "deepseek_v3_671b",
+    "glm4_9b",
+    "qwen3_moe_235b_a22b",
+    "paligemma_3b",
+    "rwkv6_3b",
+)
+
+# CLI ids use dashes, matching the assignment table.
+CANONICAL = {a.replace("_", "-").replace("-1p2b", "-1.2b"): a for a in ARCH_IDS}
+
+
+def get(arch: str):
+    """Resolve an architecture id (dash or underscore form) to its module."""
+    name = CANONICAL.get(arch, arch).replace("-", "_").replace("1.2b", "1p2b")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def all_arch_ids():
+    return list(CANONICAL.keys())

@@ -1,0 +1,35 @@
+"""phi3-medium-14b [dense] — 40L d_model=5120 40H (GQA kv=10) d_ff=17920
+vocab=100352, RoPE + SwiGLU + GQA.  [arXiv:2404.14219]"""
+from __future__ import annotations
+
+from repro.config import HeteroProfile, ModelConfig
+
+EXITS = (10, 20, 30)
+
+
+def config(sliding_window=None) -> ModelConfig:
+    return ModelConfig(
+        name="phi3-medium-14b", arch_type="dense",
+        num_layers=40, d_model=5120, num_heads=40, num_kv_heads=10,
+        d_ff=17920, vocab_size=100352, head_dim=128,
+        rope_theta=10000.0, act="silu", exit_layers=EXITS,
+        sliding_window=sliding_window,
+        source="arXiv:2404.14219",
+    )
+
+
+def smoke() -> ModelConfig:
+    import jax.numpy as jnp
+    return ModelConfig(
+        name="phi3-medium-14b-smoke", arch_type="dense",
+        num_layers=4, d_model=256, num_heads=8, num_kv_heads=2,
+        d_ff=512, vocab_size=512, head_dim=32, exit_layers=(1, 2),
+        dtype=jnp.float32, param_dtype=jnp.float32,
+        source="arXiv:2404.14219",
+    )
+
+
+def profile() -> HeteroProfile:
+    # paper setting: 12 clients, 4 per split depth
+    return HeteroProfile(split_layers=(EXITS[0],) * 4 + (EXITS[1],) * 4
+                         + (EXITS[2],) * 4)

@@ -1,0 +1,7 @@
+# Hetero-SplitEE core: the paper's contribution as composable JAX modules.
+#   splitee.py      — split specs, per-client model partitioning
+#   losses.py       — CE / entropy / confidence
+#   aggregation.py  — Eq. (1) cross-layer aggregation
+#   strategies.py   — Alg. 1 (Sequential) and Alg. 2 (Averaging), paper-faithful
+#   spmd.py         — fused SPMD production train step (masked exits + routing)
+#   inference.py    — Alg. 3 entropy-gated adaptive inference

@@ -1,0 +1,75 @@
+"""Cross-layer aggregation — paper Eq. (1).
+
+For every layer ``l`` of the full network, the participation set
+``C_l = {i | l_i < l}`` (clients whose *server-side* model contains layer l)
+averages its parameters; the mean is broadcast back to every member.  Models
+are dicts keyed by layer name (``layer4``, ``head``, ...) so "common layers"
+are identified by key across heterogeneous server models.
+
+Two implementations:
+  * ``cross_layer_aggregate``      — literal per-client loop (the reference,
+    used by the paper-faithful Averaging strategy and by the test oracle).
+  * ``masked_mean_over_axis``      — the SPMD collective form: a weighted
+    ``psum`` over a mesh axis with per-layer participation masks, used by the
+    production fused step (see core/spmd.py and DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _mean_trees(trees: Sequence[Any]) -> Any:
+    n = float(len(trees))
+    return jax.tree.map(lambda *xs: sum(x.astype(jnp.float32) for x in xs)
+                        .astype(xs[0].dtype) / n, *trees)
+
+
+def cross_layer_aggregate(server_models: Sequence[Dict[str, Any]],
+                          split_layers: Sequence[int],
+                          extra_shared_keys: Sequence[str] = ("head",),
+                          ) -> List[Dict[str, Any]]:
+    """Aggregate client-specific server models (Alg. 2 lines 20-30).
+
+    server_models[i] is a dict whose keys are the layers client i's server
+    model contains: ``layer{l}`` for l in (l_i, L] (1-indexed, paper naming)
+    plus the keys in ``extra_shared_keys`` which every server model has.
+    Returns NEW server models with common layers replaced by the mean.
+    """
+    assert len(server_models) == len(split_layers)
+    out = [dict(m) for m in server_models]
+
+    all_keys = set()
+    for m in server_models:
+        all_keys |= set(m.keys())
+
+    for key in sorted(all_keys):
+        members = [i for i, m in enumerate(server_models) if key in m]
+        if len(members) <= 1:
+            continue
+        mean = _mean_trees([server_models[i][key] for i in members])
+        for i in members:
+            out[i][key] = mean
+    return out
+
+
+def participation_counts(split_layers: Sequence[int], num_layers: int):
+    """For each 0-indexed layer l: (#clients with l client-side,
+    #clients with l server-side).  Client i holds layers [0, l_i)."""
+    n_client = [sum(1 for s in split_layers if l < s) for l in range(num_layers)]
+    n_server = [len(split_layers) - c for c in n_client]
+    return n_client, n_server
+
+
+def masked_mean_over_axis(value: jnp.ndarray, participate: jnp.ndarray,
+                          axis_name: str) -> jnp.ndarray:
+    """SPMD Eq. (1): mean of ``value`` over the mesh axis restricted to
+    shards where ``participate`` (0/1 scalar) is set.  The mean is broadcast
+    back to the members of C_l only (paper Alg. 2 line 25); non-members keep
+    their value unchanged."""
+    num = jax.lax.psum(value * participate, axis_name)
+    den = jax.lax.psum(participate, axis_name)
+    mean = num / jnp.maximum(den, 1.0)
+    return jnp.where((participate > 0) & (den > 0), mean, value)

@@ -1,0 +1,38 @@
+"""Losses and confidence measures for Hetero-SplitEE."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean CE.  logits (..., V), labels (...) int; ``mask`` (...) selects the
+    contributing elements (mean is over masked elements)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = logz - gold
+    if mask is None:
+        return jnp.mean(ce)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(ce * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray,
+             mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    hit = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    if mask is None:
+        return jnp.mean(hit)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(hit * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def softmax_entropy(logits: jnp.ndarray) -> jnp.ndarray:
+    """Paper Alg. 3: H = -sum_j p_j log p_j, computed stably in fp32.
+    Returns shape logits.shape[:-1]."""
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)

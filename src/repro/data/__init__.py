@@ -1,0 +1,2 @@
+from repro.data.synthetic import SyntheticImageDataset, SyntheticLMDataset  # noqa: F401
+from repro.data.pipeline import ClientPartitioner, batch_iterator  # noqa: F401

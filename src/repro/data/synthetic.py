@@ -1,0 +1,102 @@
+"""Synthetic datasets (offline container — no CIFAR/STL download possible).
+
+``SyntheticImageDataset`` is a *procedural class-conditional* image task with
+a difficulty knob: each class owns a random low-frequency prototype; a sample
+is prototype + random shift + Gaussian noise, with the paper's augmentation
+(4-px pad + random crop + horizontal flip) applied at batch time.  With more
+classes the prototypes crowd the same subspace and accuracy drops — giving a
+CIFAR-10-like "easy" task at 10 classes and a CIFAR-100-like "hard" task at
+100 classes, which is what the paper's claims are *about* (collaboration
+helps more as difficulty grows).  We validate orderings/gaps, not absolute
+accuracies; see EXPERIMENTS.md §Paper-validation.
+
+``SyntheticLMDataset`` produces token streams with per-sequence affine
+next-token structure (t_{i+1} = (a*t_i + b) mod V on 90%% of steps), which a
+small transformer learns quickly — used by the end-to-end driver.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+@dataclass
+class SyntheticImageDataset:
+    num_classes: int = 10
+    image_size: int = 32
+    train_size: int = 50_000
+    test_size: int = 10_000
+    noise: float = 0.9              # sample noise std (difficulty knob)
+    proto_scale: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        s = self.image_size
+        # low-frequency prototypes: upsampled 8x8 random fields
+        low = rng.normal(size=(self.num_classes, 8, 8, 3)).astype(np.float32)
+        reps = s // 8
+        self.prototypes = (np.repeat(np.repeat(low, reps, 1), reps, 2)
+                           * self.proto_scale)
+        self._train = self._make_split(rng, self.train_size)
+        self._test = self._make_split(rng, self.test_size)
+
+    def _make_split(self, rng, n) -> Tuple[np.ndarray, np.ndarray]:
+        labels = rng.integers(0, self.num_classes, size=n).astype(np.int32)
+        imgs = self.prototypes[labels].copy()
+        # per-sample cyclic shift (makes the task non-template-matching)
+        sh = rng.integers(0, 4, size=(n, 2))
+        for axis in (0, 1):
+            for k in range(1, 4):
+                idx = sh[:, axis] == k
+                imgs[idx] = np.roll(imgs[idx], k, axis=axis + 1)
+        imgs += rng.normal(scale=self.noise, size=imgs.shape).astype(np.float32)
+        return imgs, labels
+
+    @property
+    def train(self):
+        return self._train
+
+    @property
+    def test(self):
+        return self._test
+
+    @staticmethod
+    def augment(rng: np.random.Generator, imgs: np.ndarray) -> np.ndarray:
+        """Paper augmentation: zero-pad 4px, random crop, random hflip."""
+        n, h, w, c = imgs.shape
+        padded = np.pad(imgs, ((0, 0), (4, 4), (4, 4), (0, 0)))
+        out = np.empty_like(imgs)
+        ys = rng.integers(0, 9, size=n)
+        xs = rng.integers(0, 9, size=n)
+        flips = rng.random(n) < 0.5
+        for i in range(n):
+            crop = padded[i, ys[i] : ys[i] + h, xs[i] : xs[i] + w]
+            out[i] = crop[:, ::-1] if flips[i] else crop
+        return out
+
+
+@dataclass
+class SyntheticLMDataset:
+    vocab_size: int = 32_000
+    seq_len: int = 256
+    seed: int = 0
+    structure: float = 0.9          # fraction of affine next-token steps
+
+    def batches(self, batch_size: int, num_batches: int
+                ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        rng = np.random.default_rng(self.seed)
+        V, T = self.vocab_size, self.seq_len
+        for _ in range(num_batches):
+            a = rng.integers(1, 64, size=(batch_size, 1))
+            b = rng.integers(0, V, size=(batch_size, 1))
+            toks = np.empty((batch_size, T + 1), np.int64)
+            toks[:, 0] = rng.integers(0, V, size=batch_size)
+            for t in range(T):
+                nxt = (a[:, 0] * toks[:, t] + b[:, 0]) % V
+                noise = rng.integers(0, V, size=batch_size)
+                use_noise = rng.random(batch_size) > self.structure
+                toks[:, t + 1] = np.where(use_noise, noise, nxt)
+            yield toks[:, :-1].astype(np.int32), toks[:, 1:].astype(np.int32)

@@ -1,0 +1,120 @@
+"""Block-tiled causal flash attention (Pallas, TPU target).
+
+Canonical TPU pattern: grid = (B, H, num_q_blocks, num_kv_blocks) with the
+last grid axis sequential; running (max, denom, accum) live in VMEM scratch
+across kv-block steps.  GQA is native — the k/v BlockSpec index maps query
+head h to kv head h * Hkv // H, so grouped heads re-read the same kv block
+(a local revisit, no HBM duplication).  Sliding windows skip blocks entirely
+outside the band via ``pl.when``.
+
+Default blocks (128, 128): MXU-aligned (contracting/lane dims multiples of
+128); working set 4 x 128x128 x 4B ~= 256 KiB << 16 MiB VMEM, leaving head
+room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int,
+                  causal: bool, window: Optional[int]):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    # block-level skip: entirely above the causal diagonal, or entirely left
+    # of the sliding window.
+    run = jnp.asarray(True)
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window is not None:
+        run = jnp.logical_and(run, k_start + block_k > q_start - window + 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (Bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (Bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        if causal:
+            mask = kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask, s, NEG_INF)
+        elif window is not None:
+            s = jnp.where(kpos > qpos - window, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0, ...] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, Tq, D); k/v: (B, Hkv, Tk, D), H % Hkv == 0.  Tq/Tk must be
+    multiples of the block sizes (ops.py pads arbitrary shapes)."""
+    B, H, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    assert H % Hkv == 0 and Tq % block_q == 0 and Tk % block_k == 0
+    scale = 1.0 / math.sqrt(D)
+    grid = (B, H, Tq // block_q, Tk // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window)
+
+    kv_index = lambda b, h, iq, ik: (b, h * Hkv // H, ik, 0)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D), kv_index),
+            pl.BlockSpec((1, 1, block_k, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Tq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

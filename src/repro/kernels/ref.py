@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the test-suite ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B,H,Tq,D), k/v: (B,Hkv,Tk,D) -> (B,H,Tq,D), fp32 softmax."""
+    B, H, Tq, D = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Hkv, g, Tq, D).astype(jnp.float32)
+    s = jnp.einsum("bhgtd,bhsd->bhgts", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    qpos = jnp.arange(Tq)[:, None]
+    kpos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgts,bhsd->bhgtd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, Tq, D).astype(q.dtype)
+
+
+def entropy_exit_ref(logits, tau: float):
+    """(B, V) -> (entropy (B,), exit (B,) int32)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    H = -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+    return H, (H < tau).astype(jnp.int32)
+
+
+def rwkv_wkv_ref(r, k, v, log_w, u):
+    """Naive token-by-token recurrence.  r/k/v/log_w: (BH, T, K), u: (BH, K).
+    Returns y (BH, T, K) fp32."""
+    BH, T, K = r.shape
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf = jnp.exp(log_w.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bk,bv->bkv", kt, vt)
+        y = jnp.einsum("bk,bkv->bv", rt, S + uf[..., None] * kv)
+        S = S * wt[..., None] + kv
+        return S, y
+
+    S0 = jnp.zeros((BH, K, K), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, (jnp.moveaxis(rf, 1, 0),
+                                    jnp.moveaxis(kf, 1, 0),
+                                    jnp.moveaxis(vf, 1, 0),
+                                    jnp.moveaxis(wf, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1)

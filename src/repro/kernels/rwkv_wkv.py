@@ -1,0 +1,87 @@
+"""Chunked RWKV6 WKV scan (Pallas, TPU target).
+
+TPU adaptation of the Finch CUDA kernel (DESIGN.md §2): instead of one thread
+per channel marching token-by-token (GPU-shaped), we process the sequence in
+chunks — quadratic MXU work inside a chunk plus a VMEM-resident recurrent
+state (K x V per head) carried across sequential grid steps.  Per chunk, with
+per-channel cumulative log-decay L_t = sum_{j<=t} log w_j:
+
+    y_t  = (r_t * e^{L_{t-1}}) . S_chunkstart                 (inter)
+         + sum_{i<t} (r_t * e^{L_{t-1}-L_i}) . k_i  v_i       (intra)
+         + (r_t * u * k_t) . v_t                              (bonus diag)
+    S'   = diag(e^{L_Q}) S + sum_i (k_i e^{L_Q - L_i}) v_i^T
+
+Grid = (B*H, T/Q); the second axis is sequential so S lives in scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, s_scr, *,
+                chunk: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)                          # (Q, K)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)                        # log w_t <= 0
+    u = u_ref[0].astype(jnp.float32)                          # (1, K) bonus
+
+    L = jnp.cumsum(lw, axis=0)                                # (Q, K)
+    L_prev = L - lw
+    rw = r * jnp.exp(L_prev)                                  # decayed queries
+    kw = k * jnp.exp(-L)                                      # advanced keys
+
+    # intra-chunk, strictly-lower-triangular scores
+    scores = jax.lax.dot_general(rw, kw, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q,Q)
+    ti = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(tj < ti, scores, 0.0)
+    y = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # bonus diagonal (current token, no decay, u-weighted)
+    y += jnp.sum(r * u * k, axis=1, keepdims=True) * v
+    # inter-chunk from the carried state
+    y += jax.lax.dot_general(rw, s_scr[...], (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y_ref[0, ...] = y.astype(y_ref.dtype)
+
+    # state update: S' = diag(e^{L_Q}) S + sum_i (k_i e^{L_Q - L_i}) v_i^T
+    tail = jnp.exp(L[-1:, :] - L)                             # (Q, K)
+    s_new = (jnp.exp(L[-1])[:, None] * s_scr[...]
+             + jax.lax.dot_general(k * tail, v, (((0,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32))
+    s_scr[...] = s_new
+
+
+def rwkv_wkv_pallas(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    log_w: jnp.ndarray, u: jnp.ndarray, *,
+                    chunk: int = 64, interpret: bool = False) -> jnp.ndarray:
+    """r/k/v/log_w: (BH, T, K) flattened batch*heads; u: (BH, K).
+    T must be a multiple of ``chunk`` (ops.py pads).  Returns y (BH, T, K)."""
+    BH, T, K = r.shape
+    assert T % chunk == 0
+    grid = (BH, T // chunk)
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    seq_spec = pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, K), lambda b, c: (b, 0))],
+        out_specs=seq_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, T, K), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((K, K), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, log_w, u)

@@ -1,0 +1,1 @@
+# Launch layer: production mesh, sharding recipes, dry-run, train & serve drivers.

@@ -1,0 +1,334 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  ``--host-devices N`` (for local testing) is honored
+# by rewriting the flag before jax is imported.
+import sys
+
+if "--host-devices" in sys.argv:
+    _n = sys.argv[sys.argv.index("--host-devices") + 1]
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n}"
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as configs_mod
+from repro.config import (INPUT_SHAPES, SHAPES_BY_NAME, ModelConfig,
+                          OptimizerConfig, ShapeConfig, SplitEEConfig,
+                          TrainConfig)
+from repro.core.spmd import (StepConfig, boundary_ids_for_batch,
+                             make_serve_step, make_train_step)
+from repro.core.losses import softmax_entropy
+from repro.launch import shardings as sh
+from repro.launch.hlo_analysis import analyze as hlo_analyze
+from repro.launch.inputs import (abstract_params, serve_input_specs,
+                                 train_input_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.models.backbone import backbone_forward
+from repro.optim import adam_init
+
+# ---------------------------------------------------------------------------
+# long-context policy (DESIGN.md §4): SSM/hybrid run natively; dense archs
+# get a 4096-token sliding-window variant; whisper is skipped (documented).
+# ---------------------------------------------------------------------------
+LONG_SWA_WINDOW = 4096
+LONG_NATIVE = {"zamba2-1.2b", "rwkv6-3b"}
+LONG_SKIP = {"whisper-small"}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _shape_bytes(m) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum operand sizes of every collective op in the (post-SPMD) HLO.
+    Operands are the shape tokens after the '= opcode(' on the op line; the
+    result shape (before '=') is excluded."""
+    totals = {c: 0 for c in COLLECTIVES}
+    counts = {c: 0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        eq = s.find("= ")
+        if eq < 0:
+            continue
+        rhs = s[eq + 2:]
+        for c in COLLECTIVES:
+            # match opcode at the start of the rhs (e.g. "all-reduce(" or
+            # "bf16[..] all-reduce(..)") excluding -start/-done variants of
+            # async pairs (count the -start only to avoid double counting).
+            if re.search(rf"\b{c}(-start)?\(", rhs) and f"{c}-done" not in rhs:
+                paren = rhs.find("(")
+                ops = rhs[paren:]
+                b = sum(_shape_bytes(m) for m in _SHAPE_RE.finditer(ops))
+                totals[c] += b
+                counts[c] += 1
+                break
+    totals["total"] = sum(totals[c] for c in COLLECTIVES)
+    counts["total"] = sum(counts[c] for c in COLLECTIVES)
+    return {"bytes": totals, "counts": counts}
+
+
+def arch_config(arch: str, shape_name: str) -> Optional[ModelConfig]:
+    mod = configs_mod.get(arch)
+    if shape_name == "long_500k":
+        name = mod.config().name
+        if name in LONG_SKIP:
+            return None
+        if name in LONG_NATIVE:
+            return mod.config()
+        return mod.config(sliding_window=LONG_SWA_WINDOW)
+    return mod.config()
+
+
+def build_step_and_args(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                        profile, *, grad_mode: str = "eq1",
+                        remat: str = "full",
+                        recipe: Optional[sh.ShardingRecipe] = None,
+                        last_token_heads: bool = False):
+    """Returns (jitted_fn, abstract_args) ready to ``.lower()``."""
+    recipe = recipe or sh.default_recipe(cfg, mesh)
+    params_abs = abstract_params(cfg)
+    pspecs = sh.param_specs(params_abs, cfg, mesh, recipe)
+    psh = sh.to_named(pspecs, mesh)
+
+    sc = StepConfig(
+        model=cfg,
+        splitee=SplitEEConfig(profile=profile),
+        train=TrainConfig(seq_len=shape.seq_len, batch_size=shape.global_batch,
+                          remat=remat,
+                          optimizer=OptimizerConfig(
+                              state_dtype=jnp.bfloat16,
+                              total_steps=10_000)),
+        grad_mode=grad_mode)
+
+    if shape.kind == "train":
+        specs = train_input_specs(cfg, shape)
+        bsh = sh.to_named(sh.batch_specs(specs, mesh), mesh)
+        opt_abs = jax.eval_shape(
+            lambda p: adam_init(p, sc.train.optimizer), params_abs)
+        step = make_train_step(sc)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.optim import AdamState
+        opt_in_sh = AdamState(step=NamedSharding(mesh, P()), m=psh, v=psh)
+        fn = jax.jit(step,
+                     in_shardings=(psh, opt_in_sh, bsh),
+                     out_shardings=(psh, opt_in_sh, None))
+        return fn, (params_abs, opt_abs, specs)
+
+    if shape.kind == "prefill":
+        specs = train_input_specs(cfg, shape)
+        specs.pop("labels")
+        bsh = sh.to_named(sh.batch_specs(specs, mesh), mesh)
+
+        def prefill_step(params, batch):
+            out = backbone_forward(params, cfg, tokens=batch.get("tokens"),
+                                   embeds=batch.get("embeds"),
+                                   enc=batch.get("enc"),
+                                   split_ids=batch["split_ids"])
+            if last_token_heads:
+                # serving prefill needs only the next-token position; full
+                # (B,T,V) exit/final logits were the peak-memory term
+                # (§Perf iteration 3)
+                ent = [softmax_entropy(e[:, -1:]) for e in out.exit_logits]
+                return {"logits": out.logits[:, -1:],
+                        "exit_entropy": jnp.stack(ent) if ent else None}
+            ent = [softmax_entropy(e) for e in out.exit_logits]
+            return {"logits": out.logits,
+                    "exit_entropy": jnp.stack(ent) if ent else None}
+
+        fn = jax.jit(prefill_step, in_shardings=(psh, bsh))
+        return fn, (params_abs, specs)
+
+    # decode
+    specs = serve_input_specs(cfg, shape)
+    csh = sh.to_named(sh.cache_specs(specs["cache"], cfg, mesh, recipe), mesh)
+    bsh = {"tokens": sh.to_named(sh.batch_specs(
+        {"tokens": specs["tokens"]}, mesh), mesh)["tokens"],
+        "cache": csh,
+        "cache_len": sh.to_named(sh.batch_specs(
+            {"c": specs["cache_len"]}, mesh), mesh)["c"]}
+    serve = make_serve_step(sc, boundary=0)
+
+    if cfg.arch_type == "audio":
+        enc_sh = sh.to_named(sh.batch_specs({"enc": specs["enc"]}, mesh),
+                             mesh)["enc"]
+
+        def fn_step(params, tokens, cache, cache_len, enc):
+            return serve(params, tokens, cache, cache_len, enc=enc)
+
+        fn = jax.jit(fn_step, in_shardings=(psh, bsh["tokens"], csh,
+                                            bsh["cache_len"], enc_sh))
+        return fn, (params_abs, specs["tokens"], specs["cache"],
+                    specs["cache_len"], specs["enc"])
+
+    fn = jax.jit(serve, in_shardings=(psh, bsh["tokens"], csh,
+                                      bsh["cache_len"]))
+    return fn, (params_abs, specs["tokens"], specs["cache"],
+                specs["cache_len"])
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, *,
+            grad_mode: str = "eq1", remat: str = "full",
+            recipe: Optional[sh.ShardingRecipe] = None,
+            last_token_heads: bool = False,
+            mesh=None) -> Dict[str, Any]:
+    shape = SHAPES_BY_NAME[shape_name]
+    cfg = arch_config(arch, shape_name)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": "multi_pod" if multi_pod else "single_pod",
+                           "kind": shape.kind, "grad_mode": grad_mode,
+                           "remat": remat,
+                           "recipe": recipe.scheme if recipe else "greedy"}
+    if cfg is None:
+        rec["status"] = "skipped"
+        rec["reason"] = "long_500k inapplicable (see DESIGN.md §4)"
+        return rec
+    mod = configs_mod.get(arch)
+    profile = mod.profile()
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+
+    rec["last_token_heads"] = last_token_heads
+    t0 = time.time()
+    fn, args = build_step_and_args(cfg, shape, mesh, profile,
+                                   grad_mode=grad_mode, remat=remat,
+                                   recipe=recipe,
+                                   last_token_heads=last_token_heads)
+    from repro.models import sharding_ctx
+    with mesh, sharding_ctx.activation_sharding(mesh):
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "peak_memory_bytes": int(getattr(mem, "peak_memory_in_bytes", 0)),
+            "argument_size_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_size_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_size_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_size_bytes":
+                int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        }
+    except Exception as e:                                    # noqa: BLE001
+        rec["memory"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        rec["cost"] = {k: float(v) for k, v in cost.items()
+                       if isinstance(v, (int, float)) and
+                       k in ("flops", "bytes accessed", "optimal_seconds",
+                             "utilization operand 0", "bytes accessed output")}
+        rec["flops"] = float(cost.get("flops", 0.0))
+        rec["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+    except Exception as e:                                    # noqa: BLE001
+        rec["cost"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    # trip-count-aware analysis (per-device numbers; scans expanded)
+    ana = hlo_analyze(hlo)
+    rec["analysis"] = {
+        "flops_per_device": ana["flops"],
+        "hbm_bytes_per_device": ana["hbm_bytes"],
+        "collective_bytes_per_device": ana["collective_bytes"],
+        "collective_total_per_device": ana["collective_total"],
+    }
+    rec["collectives"] = collective_bytes(hlo)   # naive (bodies counted once)
+    rec["hlo_bytes"] = len(hlo)
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+    rec["status"] = "ok"
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--grad-mode", default="eq1", choices=["eq1", "sum"])
+    ap.add_argument("--remat", default="full", choices=["full", "none"])
+    ap.add_argument("--recipe", default="greedy",
+                    choices=["greedy", "megatron", "megatron-nofsdp",
+                             "hybrid"])
+    ap.add_argument("--last-token-heads", action="store_true")
+    ap.add_argument("--fsdp-pod", action="store_true",
+                    help="3-axis FSDP: shard params/optimizer over "
+                         "('pod','data') — multi-pod mesh only")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--host-devices", default="512")  # consumed pre-import
+    args = ap.parse_args()
+
+    archs = configs_mod.all_arch_ids() if args.arch == "all" else [args.arch]
+    shapes = ([s.name for s in INPUT_SHAPES] if args.shape == "all"
+              else [args.shape])
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    recipe = {
+        "greedy": None,
+        "megatron": sh.ShardingRecipe(scheme="megatron"),
+        "megatron-nofsdp": sh.ShardingRecipe(scheme="megatron", fsdp=False),
+        "hybrid": sh.ShardingRecipe(scheme="hybrid"),
+    }[args.recipe]
+    if args.fsdp_pod:
+        base = recipe or sh.ShardingRecipe()
+        import dataclasses as _dc
+        recipe = _dc.replace(base, fsdp_axes=("pod", "data"))
+
+    out_f = open(args.out, "a") if args.out else None
+    n_devices = len(jax.devices())
+    print(f"# dry-run on {n_devices} host devices (recipe={args.recipe})")
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch} x {shape} x {'multi' if multi_pod else 'single'}"
+                try:
+                    rec = run_one(arch, shape, multi_pod,
+                                  grad_mode=args.grad_mode, remat=args.remat,
+                                  recipe=recipe,
+                                  last_token_heads=args.last_token_heads)
+                except Exception:                             # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi_pod" if multi_pod else "single_pod",
+                           "grad_mode": args.grad_mode,
+                           "status": "error",
+                           "error": traceback.format_exc(limit=25)}
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f" flops={rec.get('flops', 0):.3e}"
+                             f" coll={rec['collectives']['bytes']['total']:.3e}"
+                             f" compile={rec['compile_s']}s")
+                print(f"[{status:7s}] {tag}{extra}", flush=True)
+                if out_f:
+                    out_f.write(json.dumps(rec) + "\n")
+                    out_f.flush()
+    if out_f:
+        out_f.close()
+
+
+if __name__ == "__main__":
+    main()

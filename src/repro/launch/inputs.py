@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, and allocation-free.  The dry-run lowers against these."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import HeteroProfile, ModelConfig, ShapeConfig
+from repro.models import frontend as fe
+from repro.models.backbone import build_plan, init_cache
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Inputs of the fused Hetero-SplitEE train (or prefill) step."""
+    B, T = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {"split_ids": _sds((B,), jnp.int32)}
+    if cfg.arch_type == "audio":
+        # stubbed encoder states (frontend carve-out) + decoder tokens
+        specs["enc"] = _sds((B, min(T, cfg.cross_source_len),
+                             fe.WHISPER_FRAME_DIM), cfg.dtype)
+        specs["tokens"] = _sds((B, T), jnp.int32)
+        specs["labels"] = _sds((B, T), jnp.int32)
+    elif cfg.arch_type == "vlm":
+        P = fe.NUM_VISION_PATCHES
+        t = max(T - P, 1)
+        specs["embeds"] = _sds((B, P, fe.SIGLIP_PATCH_DIM), cfg.dtype)
+        specs["tokens"] = _sds((B, t), jnp.int32)
+        specs["labels"] = _sds((B, P + t), jnp.int32)
+    else:
+        specs["tokens"] = _sds((B, T), jnp.int32)
+        specs["labels"] = _sds((B, T), jnp.int32)
+    return specs
+
+
+def serve_input_specs(cfg: ModelConfig, shape: ShapeConfig
+                      ) -> Dict[str, Any]:
+    """Inputs of the one-token decode step: single new token + a cache of
+    ``seq_len`` context (ring-buffer-bounded when cfg.sliding_window)."""
+    B, S = shape.global_batch, shape.seq_len
+    cache_shapes = jax.eval_shape(
+        lambda: init_cache(cfg, B, S, cfg.dtype))
+    specs: Dict[str, Any] = {
+        "tokens": _sds((B, 1), jnp.int32),
+        "cache": cache_shapes,
+        "cache_len": _sds((), jnp.int32),
+    }
+    if cfg.arch_type == "audio":
+        specs["enc"] = _sds((B, cfg.cross_source_len, fe.WHISPER_FRAME_DIM),
+                            cfg.dtype)
+    # vlm decode: prefix patches already live in the cache; tokens only.
+    return specs
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocating (jax.eval_shape)."""
+    from repro.models.backbone import init_backbone
+    return jax.eval_shape(lambda k: init_backbone(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))

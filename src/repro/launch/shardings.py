@@ -1,0 +1,252 @@
+"""Sharding recipes: PartitionSpec trees for params, optimizer state, batches
+and caches on the production mesh.
+
+Scheme (MaxText-style, tunable via ``ShardingRecipe`` for the §Perf loop):
+  * batch dims shard over ("pod","data") when divisible, else replicate;
+  * 2D+ weights: tensor-parallel shard the largest divisible dim over
+    "model"; with FSDP on, additionally shard the largest remaining divisible
+    dim over the fsdp axes;
+  * MoE expert stacks (leading dim == num_experts): expert-parallel —
+    E over ("data","model") when it matches the full grid (DeepSeek's 256),
+    otherwise E over "data" with the expert hidden dim over "model";
+  * stacked-run leaves (leading layer axis from the backbone scan) never
+    shard dim 0;
+  * 1D params replicate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.launch.mesh import axis_sizes, batch_axes
+
+
+@dataclass(frozen=True)
+class ShardingRecipe:
+    scheme: str = "greedy"               # greedy | megatron
+    tp_axis: str = "model"
+    fsdp: bool = True
+    fsdp_axes: Tuple[str, ...] = ("data",)
+    expert_mode: str = "auto"            # auto | data | grid
+    min_shard_elems: int = 1 << 16       # replicate tiny leaves
+    shard_cache_seq: bool = True         # shard decode cache seq dim on model
+
+
+def default_recipe(cfg: ModelConfig, mesh) -> ShardingRecipe:
+    return ShardingRecipe()
+
+
+# Megatron-style name rules: which named dim to tensor-parallel shard.
+# (param-name, dim-index-after-optional-layer-stack) -> role
+#   "col": shard an OUTPUT dim (column parallel, no comm in fwd matmul)
+#   "row": shard the CONTRACTING dim (row parallel, one all-reduce after)
+_MEGATRON_RULES = {
+    # attention (wq/wk/wv: (d, H, hd); wo: (H, hd, d))
+    "wq": ("col", 1), "wk": ("col", 1), "wv": ("col", 1), "wo": ("row", 0),
+    # MLA (latent down-projections are column-sharded too — leaving them
+    # replicated cost 1.55x collective bytes in §Perf iteration 1)
+    "w_uq": ("col", 1), "w_uk": ("col", 1), "w_uv": ("col", 1),
+    "w_dq": ("col", 1), "w_dkv": ("col", 1),
+    # SwiGLU mlp (w_gate/w_up: (d, f); w_down: (f, d))
+    "w_gate": ("col", 1), "w_up": ("col", 1), "w_down": ("row", 0),
+    # embeddings / heads (table: (V, d); head w: (d, V))
+    "table": ("col", 0), "w": ("col", 1),
+    # rwkv time-mix (wr/wk/wv/wg: (d, d) -> col; wo (d, d) -> row)
+    "wg": ("col", 1),
+    # mamba2 (in_proj output dim is a concat of z/xBC/dt -> leave to fsdp)
+    "in_proj": (None, None), "out_proj": (None, None),
+    "w_lora_a": (None, None), "w_lora_b": (None, None),
+}
+
+
+# ---------------------------------------------------------------------------
+# leaf rules
+# ---------------------------------------------------------------------------
+
+
+def _pick_dim(shape, size, skip=(), taken=()):
+    """Largest dim divisible by ``size``, excluding ``skip``/``taken``."""
+    best, best_dim = 0, None
+    for i, s in enumerate(shape):
+        if i in skip or i in taken:
+            continue
+        if s % size == 0 and s > best:
+            best, best_dim = s, i
+    return best_dim
+
+
+def _leaf_spec(leaf, sizes: Dict[str, int], recipe: ShardingRecipe,
+               skip_dim0: bool, is_expert: bool, num_experts: int,
+               name: str = ""):
+    shape = leaf.shape
+    if leaf.size < recipe.min_shard_elems or leaf.ndim < 2:
+        return P()
+    spec = [None] * leaf.ndim
+    skip = (0,) if skip_dim0 else ()
+    lead = 1 if skip_dim0 else 0       # first "real" dim after layer stacking
+
+    if is_expert:
+        grid = sizes.get("data", 1) * sizes.get(recipe.tp_axis, 1)
+        e_dim = lead
+
+        def pod_fsdp():
+            # 3-axis FSDP: shard one remaining dim over "pod" when enabled
+            if (recipe.fsdp and "pod" in recipe.fsdp_axes
+                    and sizes.get("pod", 1) > 1):
+                fd = _pick_dim(shape, sizes["pod"], skip=skip + (e_dim,),
+                               taken=tuple(i for i, s in enumerate(spec)
+                                           if s is not None))
+                if fd is not None:
+                    spec[fd] = "pod"
+
+        if (recipe.expert_mode in ("auto", "grid")
+                and num_experts % grid == 0 and grid > 1):
+            spec[e_dim] = ("data", recipe.tp_axis)
+            pod_fsdp()
+            return P(*spec)
+        if num_experts % sizes.get("data", 1) == 0:
+            spec[e_dim] = "data"
+            tp = _pick_dim(shape, sizes.get(recipe.tp_axis, 1),
+                           skip=skip + (e_dim,))
+            if tp is not None:
+                spec[tp] = recipe.tp_axis
+            pod_fsdp()
+            return P(*spec)
+        # fall through to generic rules
+
+    tp_size = sizes.get(recipe.tp_axis, 1)
+    if recipe.scheme in ("megatron", "hybrid"):
+        rule = _MEGATRON_RULES.get(name)
+        tp_dim = None
+        if rule and rule[0] is not None:
+            cand = rule[1] + lead
+            if cand < leaf.ndim and shape[cand] % tp_size == 0:
+                tp_dim = cand
+        # megatron: rule None or indivisible (e.g. 40 heads on a 16-way
+        # axis) -> replicate the TP dim and rely on FSDP (collective-free
+        # contractions, but compute replicates across the model axis).
+        # hybrid: fall back to the greedy pick instead (pays the partial-sum
+        # all-reduce, keeps compute sharded) — §Perf iteration 3.
+        if tp_dim is None and recipe.scheme == "hybrid":
+            tp_dim = _pick_dim(shape, tp_size, skip=skip)
+    else:
+        tp_dim = _pick_dim(shape, tp_size, skip=skip)
+    if tp_dim is not None and tp_size > 1:
+        spec[tp_dim] = recipe.tp_axis
+    if recipe.fsdp:
+        fsdp_size = int(np.prod([sizes.get(a, 1) for a in recipe.fsdp_axes]))
+        if fsdp_size > 1:
+            fd = _pick_dim(shape, fsdp_size, skip=skip,
+                           taken=() if tp_dim is None else (tp_dim,))
+            if fd is not None:
+                ax = (recipe.fsdp_axes if len(recipe.fsdp_axes) > 1
+                      else recipe.fsdp_axes[0])
+                spec[fd] = ax
+    return P(*spec)
+
+
+# ---------------------------------------------------------------------------
+# tree builders
+# ---------------------------------------------------------------------------
+
+
+def param_specs(abstract_params: Any, cfg: ModelConfig, mesh,
+                recipe: Optional[ShardingRecipe] = None):
+    """PartitionSpec tree matching the backbone parameter structure."""
+    recipe = recipe or default_recipe(cfg, mesh)
+    sizes = axis_sizes(mesh)
+    n_exp = cfg.moe.num_experts if cfg.moe else -1
+
+    def walk(tree, skip_dim0):
+        def visit(path, leaf):
+            keys = [getattr(p, "key", "") for p in path if hasattr(p, "key")]
+            name = keys[-1] if keys else ""
+            is_expert = (n_exp > 1 and leaf.ndim >= 2
+                         and leaf.shape[int(skip_dim0)] == n_exp
+                         and any(k in ("w_gate", "w_up", "w_down")
+                                 for k in keys))
+            return _leaf_spec(leaf, sizes, recipe, skip_dim0, is_expert,
+                              n_exp, name=name)
+        return jax.tree_util.tree_map_with_path(visit, tree)
+
+    specs = {}
+    for key, sub in abstract_params.items():
+        if key == "segments":
+            specs[key] = [
+                [walk(run_p, skip_dim0=_is_stacked(run_p))
+                 for run_p in seg]
+                for seg in sub
+            ]
+        else:
+            specs[key] = walk(sub, skip_dim0=False)
+    return specs
+
+
+def _is_stacked(run_params) -> bool:
+    """A stacked run has every leaf sharing the same leading (layer) dim and
+    norm scales of ndim 2 instead of 1."""
+    leaves = jax.tree.leaves(run_params)
+    if not leaves:
+        return False
+    # norm scales are 1-D in a single block, 2-D when stacked
+    min_ndim = min(l.ndim for l in leaves)
+    return min_ndim >= 2 and len({l.shape[0] for l in leaves}) == 1
+
+
+def batch_specs(input_specs: Dict[str, Any], mesh):
+    """Shard batch dims over ("pod","data") where divisible."""
+    axes = batch_axes(mesh)
+    sizes = axis_sizes(mesh)
+    dp = int(np.prod([sizes[a] for a in axes]))
+    ax = axes if len(axes) > 1 else axes[0]
+
+    def visit(leaf):
+        if leaf.ndim == 0 or leaf.shape[0] % dp != 0:
+            return P()
+        return P(ax, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(visit, input_specs)
+
+
+def cache_specs(cache_abstract: Any, cfg: ModelConfig, mesh,
+                recipe: Optional[ShardingRecipe] = None):
+    """Decode caches: batch dim over ("pod","data") when divisible; the
+    sequence/window dim over "model" when divisible (k/v/ckv buffers)."""
+    recipe = recipe or default_recipe(cfg, mesh)
+    axes = batch_axes(mesh)
+    sizes = axis_sizes(mesh)
+    dp = int(np.prod([sizes[a] for a in axes]))
+    tp = sizes.get(recipe.tp_axis, 1)
+    ax = axes if len(axes) > 1 else axes[0]
+
+    def visit(leaf):
+        if leaf.ndim < 2:
+            return P()
+        spec = [None] * leaf.ndim
+        # stacked run caches have a leading layer dim; batch is dim 0 or 1
+        bdim = 0
+        if leaf.ndim >= 3 and leaf.shape[0] <= 128 and leaf.shape[1] != 1:
+            # heuristics fail-safe: treat dim0 as layer-stack only when the
+            # batch dim divides dp at dim1 but not dim0
+            if leaf.shape[0] % dp != 0 and leaf.shape[1] % dp == 0:
+                bdim = 1
+        if leaf.shape[bdim] % dp == 0:
+            spec[bdim] = ax
+        if recipe.shard_cache_seq and leaf.ndim >= bdim + 2:
+            sdim = bdim + 1
+            if leaf.shape[sdim] % tp == 0 and leaf.shape[sdim] >= 2 * tp:
+                spec[sdim] = recipe.tp_axis
+        return P(*spec)
+
+    return jax.tree.map(visit, cache_abstract)
+
+
+def to_named(spec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

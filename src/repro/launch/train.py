@@ -1,0 +1,116 @@
+"""Training driver: fused SPMD Hetero-SplitEE training of any registered
+architecture on a jax mesh.
+
+Two scales, same code path:
+  * host demo (this container): ``--mesh host --host-shape 1,1`` over CPU
+    devices, smoke-size configs, synthetic LM data — actually executes.
+  * production: ``--mesh single|multi`` builds the 256/512-chip mesh (on the
+    real cluster this runs; here it is exercised by dryrun.py which shares
+    ``build_step_and_args``).
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --smoke \
+      --steps 20 --batch 8 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as configs_mod
+from repro.checkpoint import save_pytree
+from repro.config import (HeteroProfile, OptimizerConfig, SplitEEConfig,
+                          TrainConfig)
+from repro.core.spmd import StepConfig, boundary_ids_for_batch, make_train_step
+from repro.data.synthetic import SyntheticLMDataset
+from repro.models.backbone import init_backbone
+from repro.optim import adam_init
+from repro.launch.mesh import make_production_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-mode", default="eq1", choices=["eq1", "sum"])
+    ap.add_argument("--remat", default="none", choices=["none", "full"])
+    ap.add_argument("--mesh", default="host", choices=["host", "single", "multi"])
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    mod = configs_mod.get(args.arch)
+    cfg = mod.smoke() if args.smoke else mod.config()
+    # hetero profile over this config's exit layers (paper: 12 clients, 4 per
+    # depth); smoke configs may expose fewer exits.
+    exits = cfg.exit_layers
+    splits = tuple(np.repeat(exits, max(1, 12 // len(exits))))
+    profile = HeteroProfile(split_layers=splits)
+
+    sc = StepConfig(
+        model=cfg,
+        splitee=SplitEEConfig(profile=profile),
+        train=TrainConfig(
+            batch_size=args.batch, seq_len=args.seq, remat=args.remat,
+            optimizer=OptimizerConfig(lr=args.lr, total_steps=args.steps,
+                                      warmup_steps=0)),
+        grad_mode=args.grad_mode)
+
+    rng = jax.random.PRNGKey(args.seed)
+    params = init_backbone(rng, cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name}  params={n_params/1e6:.1f}M  "
+          f"devices={len(jax.devices())}  profile={profile.split_layers}")
+
+    opt_state = adam_init(params, sc.train.optimizer)
+    step_fn = jax.jit(make_train_step(sc))
+
+    data = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                              seed=args.seed)
+    split_ids = boundary_ids_for_batch(profile, cfg, args.batch)
+
+    t0 = time.time()
+    for step, (toks, labels) in enumerate(
+            data.batches(args.batch, args.steps)):
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels),
+                 "split_ids": split_ids}
+        if cfg.arch_type == "audio":
+            batch["enc"] = jnp.zeros(
+                (args.batch, min(args.seq, cfg.cross_source_len), 768),
+                cfg.dtype)
+        if cfg.arch_type == "vlm":
+            from repro.models import frontend as fe
+            P = min(fe.NUM_VISION_PATCHES, args.seq // 2)
+            batch["embeds"] = jnp.zeros((args.batch, P, fe.SIGLIP_PATCH_DIM),
+                                        cfg.dtype)
+            batch["labels"] = jnp.asarray(
+                np.concatenate([np.zeros((args.batch, P), np.int32), labels],
+                               axis=1))
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            dt = time.time() - t0
+            print(f"step {step:5d}  server_loss {m['server_loss']:.4f}  "
+                  f"client_losses "
+                  + " ".join(f"{v:.3f}" for k, v in sorted(m.items())
+                             if k.startswith("client_loss"))
+                  + f"  lr {m['lr']:.2e}  [{dt:.1f}s]")
+
+    if args.checkpoint:
+        save_pytree(args.checkpoint, {"params": params},
+                    metadata={"arch": cfg.name, "steps": args.steps})
+        print(f"checkpoint -> {args.checkpoint}.npz")
+
+
+if __name__ == "__main__":
+    main()

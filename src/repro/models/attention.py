@@ -1,0 +1,262 @@
+"""Attention mixers: GQA (with RoPE + optional sliding window), DeepSeek MLA,
+and encoder-decoder cross attention.  Pure-jnp reference path used for
+lowering/dry-run; the Pallas flash kernel in ``repro.kernels`` is the TPU
+hot-path and is validated against this module.
+
+Cache contract (decode):
+  GQA  : {"k": (B, W, Hkv, hd), "v": (B, W, Hkv, hd)}  — W = window or max_len.
+         Keys are stored *already roped* (absolute positions), so a ring
+         buffer needs no re-rotation.
+  MLA  : {"ckv": (B, W, kv_lora), "k_rope": (B, W, rope_dim)}
+``cache_len`` is the number of tokens already written (int32 scalar).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MLAConfig, ModelConfig
+from repro.models.common import fan_in_init, init_rmsnorm, rmsnorm, zeros
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+
+def causal_mask(q_len: int, kv_len: int, window: Optional[int] = None,
+                q_offset: int = 0) -> jnp.ndarray:
+    """(q_len, kv_len) boolean mask; True = attend.  ``q_offset`` shifts query
+    positions (for chunked prefill).  ``window`` bounds the lookback."""
+    qpos = jnp.arange(q_len)[:, None] + q_offset
+    kpos = jnp.arange(kv_len)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m
+
+
+def _sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+          mask: Optional[jnp.ndarray], scale: float) -> jnp.ndarray:
+    """q: (B,T,H,hd)  k/v: (B,S,Hkv,hd) with H % Hkv == 0 (GQA broadcast)."""
+    B, T, H, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, T, Hkv, g, hd)
+    logits = jnp.einsum("bthgd,bshd->bhgts", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgts,bshd->bthgd", probs, v)
+    return out.reshape(B, T, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(rng, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    H, Hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": fan_in_init(ks[0], (d, H, hd), cfg.param_dtype, fan_in=d),
+        "wk": fan_in_init(ks[1], (d, Hkv, hd), cfg.param_dtype, fan_in=d),
+        "wv": fan_in_init(ks[2], (d, Hkv, hd), cfg.param_dtype, fan_in=d),
+        "wo": fan_in_init(ks[3], (H, hd, d), cfg.param_dtype, fan_in=H * hd),
+    }
+    if cfg.use_qkv_bias:
+        p["bq"] = zeros((H, hd), cfg.param_dtype)
+        p["bk"] = zeros((Hkv, hd), cfg.param_dtype)
+        p["bv"] = zeros((Hkv, hd), cfg.param_dtype)
+    return p
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    W = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    return {
+        "k": jnp.zeros((batch, W, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, W, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def gqa_forward(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
+                cfg: ModelConfig, *, cache: Optional[dict] = None,
+                cache_len: Optional[jnp.ndarray] = None,
+                ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Full causal (train/prefill) when ``cache is None``; single-token decode
+    against a (ring-buffer) cache otherwise."""
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+    if cfg.use_qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        T = x.shape[1]
+        mask = causal_mask(T, T, cfg.sliding_window)
+        out = _sdpa(q, k, v, mask, scale)
+    else:
+        # write (k, v) into the (ring) buffer, attend over it.  Modes:
+        # prefill (T > 1, cache_len == 0) and decode (T == 1, ring).  Token
+        # position p always lives at slot p % W so decode needs no re-layout.
+        T = x.shape[1]
+        W = cache["k"].shape[1]
+        if T > 1 and T >= W:
+            # prefill longer than the window: full in-flight SWA attention,
+            # then keep only the last W tokens, rolled to slot p % W.
+            mask = causal_mask(T, T, cfg.sliding_window)
+            out = _sdpa(q, k, v, mask, scale)
+            shift = (T - W) % W
+            ck = jnp.roll(k[:, T - W:], shift, axis=1)
+            cv = jnp.roll(v[:, T - W:], shift, axis=1)
+            cache = {"k": ck, "v": cv}
+        else:
+            slot = (cache_len % W).astype(jnp.int32)
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+            cache = {"k": ck, "v": cv}
+            if T > 1:
+                # short prefill: causal over the freshly written [0, T) slots.
+                mask = causal_mask(T, W, cfg.sliding_window)
+            else:
+                n_valid = jnp.minimum(cache_len + 1, W)
+                mask = (jnp.arange(W) < n_valid)[None, :]    # (1, W)
+            out = _sdpa(q, ck, cv, mask, scale)
+    out = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return out.astype(x.dtype), cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(rng, cfg: ModelConfig) -> dict:
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(rng, 7)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": fan_in_init(ks[0], (d, m.q_lora_rank), cfg.param_dtype),
+        "q_norm": init_rmsnorm(m.q_lora_rank, cfg.param_dtype),
+        "w_uq": fan_in_init(ks[1], (m.q_lora_rank, H, qk_dim), cfg.param_dtype,
+                            fan_in=m.q_lora_rank),
+        "w_dkv": fan_in_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                             cfg.param_dtype),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank, cfg.param_dtype),
+        "w_uk": fan_in_init(ks[3], (m.kv_lora_rank, H, m.qk_nope_head_dim),
+                            cfg.param_dtype, fan_in=m.kv_lora_rank),
+        "w_uv": fan_in_init(ks[4], (m.kv_lora_rank, H, m.v_head_dim),
+                            cfg.param_dtype, fan_in=m.kv_lora_rank),
+        "wo": fan_in_init(ks[5], (H, m.v_head_dim, d), cfg.param_dtype,
+                          fan_in=H * m.v_head_dim),
+    }
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    m: MLAConfig = cfg.mla
+    W = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    return {
+        "ckv": jnp.zeros((batch, W, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, W, m.qk_rope_head_dim), dtype),
+    }
+
+
+def _mla_project_q(params, x, positions, m: MLAConfig, cfg):
+    cq = rmsnorm(params["q_norm"], jnp.einsum("btd,dr->btr", x, params["w_dq"]),
+                 cfg.norm_eps)
+    q = jnp.einsum("btr,rhk->bthk", cq, params["w_uq"])
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_project_kv(params, x, positions, m: MLAConfig, cfg):
+    dkv = jnp.einsum("btd,dr->btr", x, params["w_dkv"])
+    ckv = rmsnorm(params["kv_norm"], dkv[..., : m.kv_lora_rank], cfg.norm_eps)
+    k_rope = dkv[..., m.kv_lora_rank:][..., None, :]          # (B,T,1,rope)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[..., 0, :]
+    return ckv, k_rope
+
+
+def mla_forward(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
+                cfg: ModelConfig, *, cache: Optional[dict] = None,
+                cache_len: Optional[jnp.ndarray] = None,
+                ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    m: MLAConfig = cfg.mla
+    H = cfg.num_heads
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = _mla_project_q(params, x, positions, m, cfg)
+
+    if cache is None:
+        # train/prefill: naive expansion (matmul-dense, MXU-friendly).
+        ckv, k_rope = _mla_project_kv(params, x, positions, m, cfg)
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv, params["w_uk"])
+        v = jnp.einsum("bsr,rhk->bshk", ckv, params["w_uv"])
+        T = x.shape[1]
+        mask = causal_mask(T, T, cfg.sliding_window)
+        logits = (jnp.einsum("bthk,bshk->bhts", q_nope, k_nope)
+                  + jnp.einsum("bthk,bsk->bhts", q_rope, k_rope)
+                  ).astype(jnp.float32) * scale
+        logits = jnp.where(mask, logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhts,bshk->bthk", probs, v)
+        new_cache = None
+    else:
+        # decode: weight-absorbed attention in latent space (T == 1).
+        ckv_t, k_rope_t = _mla_project_kv(params, x, positions, m, cfg)
+        W = cache["ckv"].shape[1]
+        slot = (cache_len % W).astype(jnp.int32)
+        ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_t, (0, slot, 0))
+        k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_t, (0, slot, 0))
+        new_cache = {"ckv": ckv, "k_rope": k_rope}
+        n_valid = jnp.minimum(cache_len + 1, W)
+        mask = (jnp.arange(W) < n_valid)[None, None, None, :]  # (1,1,1,W)
+        q_abs = jnp.einsum("bthk,rhk->bthr", q_nope, params["w_uk"])
+        logits = (jnp.einsum("bthr,bsr->bhts", q_abs, ckv)
+                  + jnp.einsum("bthk,bsk->bhts", q_rope, k_rope)
+                  ).astype(jnp.float32) * scale
+        logits = jnp.where(mask, logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        o_lat = jnp.einsum("bhts,bsr->bthr", probs, ckv)
+        out = jnp.einsum("bthr,rhk->bthk", o_lat, params["w_uv"])
+    out = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return out.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def init_cross_attn(rng, cfg: ModelConfig) -> dict:
+    d, hd, H = cfg.d_model, cfg.head_dim, cfg.num_heads
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": fan_in_init(ks[0], (d, H, hd), cfg.param_dtype, fan_in=d),
+        "wk": fan_in_init(ks[1], (d, H, hd), cfg.param_dtype, fan_in=d),
+        "wv": fan_in_init(ks[2], (d, H, hd), cfg.param_dtype, fan_in=d),
+        "wo": fan_in_init(ks[3], (H, hd, d), cfg.param_dtype, fan_in=H * hd),
+    }
+
+
+def cross_attn_forward(params: dict, x: jnp.ndarray, enc: jnp.ndarray,
+                       cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B,T,d) decoder stream; enc: (B,S,d) encoder states (stub frontend)."""
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", enc, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc, params["wv"])
+    out = _sdpa(q, k, v, None, scale)
+    return jnp.einsum("bthk,hkd->btd", out, params["wo"]).astype(x.dtype)

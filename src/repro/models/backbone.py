@@ -1,0 +1,276 @@
+"""Segmented, scan-stacked decoder backbone with Hetero-SplitEE exit heads.
+
+Layer layout
+------------
+``cfg.exit_layers`` partitions the ``num_layers`` blocks into *segments*.
+After every segment boundary an **exit head** (the paper's client output
+layer `f^(o)`) is attached.  Within a segment, layers are grouped into maximal
+*runs* of identical (mixer, ffn) kind; every run of length > 1 is stacked
+along a leading layer axis and driven by ``jax.lax.scan`` — this keeps the
+HLO O(#runs) instead of O(#layers) (94-layer Qwen3-MoE compiles as a handful
+of scans).  Layers of kind ``shared_attn`` (Zamba2's globally-shared
+attention block) reference one top-level parameter set and are unrolled.
+
+Hetero-SplitEE semantics (DESIGN.md §2)
+---------------------------------------
+``split_ids`` assigns every example the *boundary index* of its client's cut
+layer.  At boundary ``b`` the residual stream is replaced by
+``stop_gradient`` for exactly the examples whose split is ``b``.  Hence for a
+client with cut layer l_i:
+  * its early-exit loss reaches layers 1..l_i (client-side training),
+  * the final (server) loss reaches only layers l_i+1..L,
+which is precisely Algorithm 1/2's gradient routing, fused into one SPMD
+program.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import blocks as blocks_mod
+from repro.models import frontend as frontend_mod
+from repro.models import heads as heads_mod
+from repro.models.common import embed, init_embedding, split_rng
+
+
+# ---------------------------------------------------------------------------
+# Plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Run:
+    mixer: str            # "attn" | "mla" | "mamba2" | "rwkv6" | "shared_attn"
+    ffn: str
+    start: int            # absolute layer index of the first layer in the run
+    length: int
+
+    @property
+    def shared(self) -> bool:
+        return self.mixer == "shared_attn"
+
+
+def build_plan(cfg: ModelConfig) -> Tuple[Tuple[Run, ...], ...]:
+    """Runs per segment."""
+    plan: List[Tuple[Run, ...]] = []
+    for (lo, hi) in cfg.segments():
+        runs: List[Run] = []
+        l = lo
+        while l < hi:
+            kind = (cfg.block_pattern[l], cfg.ffn_pattern[l])
+            if cfg.block_pattern[l] == "shared_attn":
+                runs.append(Run("shared_attn", cfg.ffn_pattern[l], l, 1))
+                l += 1
+                continue
+            n = 1
+            while (l + n < hi
+                   and (cfg.block_pattern[l + n], cfg.ffn_pattern[l + n]) == kind
+                   and cfg.block_pattern[l + n] != "shared_attn"):
+                n += 1
+            runs.append(Run(kind[0], kind[1], l, n))
+            l += n
+        plan.append(tuple(runs))
+    return tuple(plan)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_backbone(rng, cfg: ModelConfig) -> dict:
+    plan = build_plan(cfg)
+    rngs = split_rng(rng, ["embed", "layers", "exits", "head", "shared", "front"])
+    params: dict = {"embed": init_embedding(rngs["embed"], cfg.vocab_size,
+                                            cfg.d_model, cfg.param_dtype)}
+
+    if cfg.arch_type == "audio":
+        params["frontend"] = frontend_mod.init_projector(
+            rngs["front"], frontend_mod.WHISPER_FRAME_DIM, cfg)
+    elif cfg.arch_type == "vlm":
+        params["frontend"] = frontend_mod.init_projector(
+            rngs["front"], frontend_mod.SIGLIP_PATCH_DIM, cfg)
+
+    if any(r.shared for seg in plan for r in seg):
+        params["shared_attn"] = blocks_mod.init_block(
+            rngs["shared"], cfg, "attn", cfg.ffn_pattern[_first_shared(cfg)])
+
+    seg_params: List[List[Any]] = []
+    lrng = rngs["layers"]
+    for seg in plan:
+        run_params: List[Any] = []
+        for run in seg:
+            lrng, sub = jax.random.split(lrng)
+            if run.shared:
+                run_params.append({})        # references params["shared_attn"]
+            elif run.length == 1:
+                run_params.append(blocks_mod.init_block(sub, cfg, run.mixer, run.ffn))
+            else:
+                ks = jax.random.split(sub, run.length)
+                run_params.append(jax.vmap(
+                    lambda k: blocks_mod.init_block(k, cfg, run.mixer, run.ffn))(ks))
+        seg_params.append(run_params)
+    params["segments"] = seg_params
+
+    n_exits = len(cfg.exit_layers)
+    if n_exits:
+        eks = jax.random.split(rngs["exits"], n_exits)
+        params["exit_heads"] = [heads_mod.init_exit_head(k, cfg) for k in eks]
+    params["head"] = heads_mod.init_lm_head(rngs["head"], cfg)
+    return params
+
+
+def _first_shared(cfg: ModelConfig) -> int:
+    return next(i for i, b in enumerate(cfg.block_pattern) if b == "shared_attn")
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> list:
+    """Cache pytree mirroring the plan: per segment, per run, a (stacked)
+    block cache."""
+    plan = build_plan(cfg)
+    cache = []
+    for seg in plan:
+        seg_cache = []
+        for run in seg:
+            mixer = "attn" if run.shared else run.mixer
+            one = blocks_mod.init_block_cache(cfg, mixer, run.ffn, batch,
+                                              max_len, dtype)
+            if run.length > 1:
+                one = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (run.length, *a.shape)), one)
+            seg_cache.append(one)
+        cache.append(seg_cache)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BackboneOutput:
+    logits: jnp.ndarray                       # final (server) logits
+    exit_logits: Tuple[jnp.ndarray, ...]      # one per exit boundary
+    aux_loss: jnp.ndarray                     # MoE load-balance etc.
+    cache: Optional[list]                     # updated decode cache
+    exit_features: Tuple[jnp.ndarray, ...]    # h_i at each boundary (pre-stop)
+
+
+jax.tree_util.register_pytree_node(
+    BackboneOutput,
+    lambda o: ((o.logits, o.exit_logits, o.aux_loss, o.cache, o.exit_features), None),
+    lambda _, c: BackboneOutput(*c),
+)
+
+
+def _run_forward(run: Run, run_params, shared_params, x, positions, cfg,
+                 cache, cache_len, enc, remat: bool):
+    """Apply one run (scan if stacked)."""
+    mixer = "attn" if run.shared else run.mixer
+    p = shared_params if run.shared else run_params
+
+    body = functools.partial(blocks_mod.block_forward, cfg=cfg, mixer=mixer,
+                             ffn=run.ffn)
+    if remat:
+        body = jax.checkpoint(body)
+
+    if run.length == 1 or run.shared:
+        x, new_c, aux = body(p, x, positions, cache=cache, cache_len=cache_len,
+                             enc=enc)
+        return x, new_c, aux
+
+    def scan_body(carry, xs):
+        h, aux_acc = carry
+        layer_p, layer_c = xs
+        h, new_c, aux = body(layer_p, h, positions, cache=layer_c,
+                             cache_len=cache_len, enc=enc)
+        return (h, aux_acc + aux), new_c
+
+    init = (x, jnp.zeros((), jnp.float32))
+    if cache is None:
+        (x, aux), _ = jax.lax.scan(scan_body, init, (run_params, None),
+                                   length=run.length)
+        new_cache = None
+    else:
+        (x, aux), new_cache = jax.lax.scan(scan_body, init, (run_params, cache))
+    return x, new_cache, aux
+
+
+def backbone_forward(params: dict, cfg: ModelConfig, *,
+                     tokens: Optional[jnp.ndarray] = None,
+                     embeds: Optional[jnp.ndarray] = None,
+                     enc: Optional[jnp.ndarray] = None,
+                     split_ids: Optional[jnp.ndarray] = None,
+                     cache: Optional[list] = None,
+                     cache_len: Optional[jnp.ndarray] = None,
+                     remat: bool = False) -> BackboneOutput:
+    """Run the full network.
+
+    tokens    : (B, T) int32, or None when ``embeds`` is given directly.
+    embeds    : (B, S, feat) precomputed frontend embeddings (audio/vlm);
+                concatenated *before* the token stream when both are given.
+    enc       : (B, S, d_model) encoder states for cross-attention (audio).
+    split_ids : (B,) int32 boundary index per example (Hetero-SplitEE); the
+                residual stream is stop-gradient'ed at that boundary.  None
+                disables split semantics (centralized model).
+    cache     : decode cache from ``init_cache``; ``cache_len`` tokens filled.
+    """
+    plan = build_plan(cfg)
+    if enc is not None and "frontend" in params:
+        # stubbed encoder states -> d_model (audio carve-out projector)
+        enc = frontend_mod.project(params["frontend"], enc).astype(cfg.dtype)
+    parts = []
+    if embeds is not None and "frontend" in params:
+        parts.append(frontend_mod.project(params["frontend"], embeds))
+    if tokens is not None:
+        parts.append(embed(params["embed"], tokens).astype(cfg.dtype))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    x = x.astype(cfg.dtype)
+
+    T = x.shape[1]
+    if cache_len is not None:
+        positions = cache_len + jnp.arange(T, dtype=jnp.int32)
+    else:
+        positions = jnp.arange(T, dtype=jnp.int32)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    exit_logits: List[jnp.ndarray] = []
+    exit_feats: List[jnp.ndarray] = []
+    new_cache: Optional[list] = [] if cache is not None else None
+    shared_p = params.get("shared_attn")
+
+    n_seg = len(plan)
+    for si, seg in enumerate(plan):
+        for ri, run in enumerate(seg):
+            run_c = cache[si][ri] if cache is not None else None
+            x, run_c_new, aux = _run_forward(
+                run, params["segments"][si][ri], shared_p, x, positions, cfg,
+                run_c, cache_len, enc, remat)
+            aux_total = aux_total + aux
+            if cache is not None:
+                new_cache.append((si, run_c_new))
+        if si < n_seg - 1:
+            # ---- Hetero-SplitEE boundary si ----
+            exit_feats.append(x)
+            exit_logits.append(
+                heads_mod.exit_head(params["exit_heads"][si], x, cfg))
+            if split_ids is not None:
+                is_cut = (split_ids == si)[:, None, None]
+                x = jnp.where(is_cut, jax.lax.stop_gradient(x), x)
+
+    logits = heads_mod.lm_head(params["head"], x, cfg)
+    if cache is not None:
+        # regroup flat (si, cache) list back into per-segment lists
+        regrouped: List[list] = [[] for _ in plan]
+        for si, c in new_cache:
+            regrouped[si].append(c)
+        new_cache = regrouped
+    return BackboneOutput(logits=logits, exit_logits=tuple(exit_logits),
+                          aux_loss=aux_total, cache=new_cache,
+                          exit_features=tuple(exit_feats))

@@ -1,0 +1,114 @@
+"""Block dispatch: one pre-norm residual block = mixer + FFN.
+
+Mixer kinds : "attn" (GQA), "mla" (DeepSeek latent attention),
+              "mamba2", "rwkv6".
+FFN kinds   : "mlp" (SwiGLU/GeLU), "moe", "rwkv_cm", "none".
+
+Blocks are pytree-uniform within a kind so that runs of identical blocks can
+be stacked and driven by ``lax.scan`` in the backbone.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import init_rmsnorm, rmsnorm
+from repro.models.mlp import init_mlp, mlp_forward
+
+MIXER_INIT = {
+    "attn": attn_mod.init_gqa,
+    "mla": attn_mod.init_mla,
+    "mamba2": ssm_mod.init_mamba2,
+    "rwkv6": ssm_mod.init_rwkv6,
+}
+
+
+def init_block(rng, cfg: ModelConfig, mixer: str, ffn: str) -> dict:
+    ks = jax.random.split(rng, 4)
+    p: dict = {"norm1": init_rmsnorm(cfg.d_model, cfg.param_dtype),
+               "mixer": MIXER_INIT[mixer](ks[0], cfg)}
+    if ffn != "none":
+        p["norm2"] = init_rmsnorm(cfg.d_model, cfg.param_dtype)
+        if ffn == "mlp":
+            p["ffn"] = init_mlp(ks[1], cfg)
+        elif ffn == "moe":
+            p["ffn"] = moe_mod.init_moe(ks[1], cfg)
+        elif ffn == "rwkv_cm":
+            p["ffn"] = ssm_mod.init_rwkv_cm(ks[1], cfg)
+        else:
+            raise ValueError(ffn)
+    if cfg.cross_attention and mixer in ("attn", "mla"):
+        p["norm_x"] = init_rmsnorm(cfg.d_model, cfg.param_dtype)
+        p["cross"] = attn_mod.init_cross_attn(ks[2], cfg)
+    return p
+
+
+def init_block_cache(cfg: ModelConfig, mixer: str, ffn: str, batch: int,
+                     max_len: int, dtype) -> dict:
+    c: dict = {}
+    if mixer == "attn":
+        c["mixer"] = attn_mod.init_gqa_cache(cfg, batch, max_len, dtype)
+    elif mixer == "mla":
+        c["mixer"] = attn_mod.init_mla_cache(cfg, batch, max_len, dtype)
+    elif mixer == "mamba2":
+        c["mixer"] = ssm_mod.init_mamba2_cache(cfg, batch, dtype)
+    elif mixer == "rwkv6":
+        c["mixer"] = ssm_mod.init_rwkv6_cache(cfg, batch, dtype)
+    if ffn == "rwkv_cm":
+        c["cm_last"] = jnp.zeros((batch, 1, cfg.d_model), dtype)
+    return c
+
+
+def block_forward(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
+                  cfg: ModelConfig, mixer: str, ffn: str, *,
+                  cache: Optional[dict] = None,
+                  cache_len: Optional[jnp.ndarray] = None,
+                  enc: Optional[jnp.ndarray] = None,
+                  ) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {} if cache is not None else None
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    mc = cache.get("mixer") if cache is not None else None
+
+    if mixer == "attn":
+        m, mc_new = attn_mod.gqa_forward(params["mixer"], h, positions, cfg,
+                                         cache=mc, cache_len=cache_len)
+    elif mixer == "mla":
+        m, mc_new = attn_mod.mla_forward(params["mixer"], h, positions, cfg,
+                                         cache=mc, cache_len=cache_len)
+    elif mixer == "mamba2":
+        m, mc_new = ssm_mod.mamba2_forward(params["mixer"], h, cfg, cache=mc)
+    elif mixer == "rwkv6":
+        m, mc_new = ssm_mod.rwkv6_forward(params["mixer"], h, cfg, cache=mc)
+    else:
+        raise ValueError(mixer)
+    x = x + m
+    if cache is not None:
+        new_cache["mixer"] = mc_new
+
+    if "cross" in params and enc is not None:
+        hx = rmsnorm(params["norm_x"], x, cfg.norm_eps)
+        x = x + attn_mod.cross_attn_forward(params["cross"], hx, enc, cfg)
+
+    if ffn != "none":
+        h2 = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if ffn == "mlp":
+            f = mlp_forward(params["ffn"], h2, cfg)
+        elif ffn == "moe":
+            f, aux = moe_mod.moe_forward(params["ffn"], h2, cfg)
+        elif ffn == "rwkv_cm":
+            last = cache.get("cm_last") if cache is not None else None
+            f = ssm_mod.rwkv_cm_forward(params["ffn"], h2, cfg, last=last)
+            if cache is not None:
+                new_cache["cm_last"] = h2[:, -1:]
+        else:
+            raise ValueError(ffn)
+        x = x + f
+    return x, new_cache, aux

@@ -1,0 +1,112 @@
+"""Shared building blocks: initializers, norms, embeddings, linear layers.
+
+Parameters are plain nested dicts of ``jnp.ndarray`` — no framework.  Every
+``init_*`` function takes an ``rng`` and returns a pytree; every ``apply``-side
+function takes ``(params, inputs, ...)`` and is pure.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def trunc_normal(rng, shape, std: float, dtype) -> jnp.ndarray:
+    """Truncated-normal init (2 sigma), the MaxText/PaLM default."""
+    unscaled = jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+    return (unscaled * std).astype(dtype)
+
+
+def fan_in_init(rng, shape, dtype, fan_in: Optional[int] = None) -> jnp.ndarray:
+    fi = fan_in if fan_in is not None else shape[0]
+    return trunc_normal(rng, shape, 1.0 / math.sqrt(max(1, fi)), dtype)
+
+
+def zeros(shape, dtype) -> jnp.ndarray:
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype) -> jnp.ndarray:
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype) -> dict:
+    return {"scale": ones((d,), dtype), "bias": zeros((d,), dtype)}
+
+
+def layernorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    normed = (xf - mean) * jax.lax.rsqrt(var + eps)
+    out = normed * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear / embedding
+# ---------------------------------------------------------------------------
+
+
+def init_linear(rng, d_in: int, d_out: int, dtype, bias: bool = False) -> dict:
+    p = {"w": fan_in_init(rng, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = zeros((d_out,), dtype)
+    return p
+
+
+def linear(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = jnp.einsum("...i,io->...o", x, params["w"])
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def init_embedding(rng, vocab: int, d: int, dtype) -> dict:
+    return {"table": trunc_normal(rng, (vocab, d), 1.0, dtype)}
+
+
+def embed(params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied unembedding: project activations onto the embedding table."""
+    return jnp.einsum("...d,vd->...v", x, params["table"])
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def split_rng(rng, names: Sequence[str]) -> dict:
+    keys = jax.random.split(rng, len(names))
+    return dict(zip(names, keys))

@@ -1,0 +1,26 @@
+"""Stub modality frontends (the one allowed carve-out, see DESIGN.md §4).
+
+``input_specs`` for audio/VLM architectures hands the backbone *precomputed*
+frame/patch embeddings of the right shape; this module contributes only the
+linear projector that maps frontend feature dims into ``d_model``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import fan_in_init
+
+# feature dims of the (stubbed) frontends
+WHISPER_FRAME_DIM = 768          # whisper-small encoder state dim
+SIGLIP_PATCH_DIM = 1152          # SigLIP-So400m patch embedding dim
+NUM_VISION_PATCHES = 256         # paligemma 224px / 14px patches
+WHISPER_SOURCE_LEN = 1500        # 30 s of audio after conv striding
+
+
+def init_projector(rng, in_dim: int, cfg: ModelConfig) -> dict:
+    return {"w": fan_in_init(rng, (in_dim, cfg.d_model), cfg.param_dtype)}
+
+
+def project(params: dict, feats: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("bsf,fd->bsd", feats, params["w"])

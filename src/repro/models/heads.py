@@ -1,0 +1,31 @@
+"""Output heads.
+
+``lm_head``   — final norm + unembedding (the *server output layer* of the
+                paper, transplanted to token models).
+``exit_head`` — the paper's lightweight *client output layer* `f_i^(o)`: for
+                token models a norm + linear classifier (EE-LLM style); for
+                image models average-pool + fc (paper Table I).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import fan_in_init, init_rmsnorm, rmsnorm
+
+
+def init_lm_head(rng, cfg: ModelConfig) -> dict:
+    return {
+        "norm": init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "w": fan_in_init(rng, (cfg.d_model, cfg.vocab_size), cfg.param_dtype),
+    }
+
+
+def lm_head(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    h = rmsnorm(params["norm"], x, cfg.norm_eps)
+    return jnp.einsum("btd,dv->btv", h, params["w"])
+
+
+init_exit_head = init_lm_head
+exit_head = lm_head

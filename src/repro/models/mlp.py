@@ -1,0 +1,36 @@
+"""Feed-forward blocks: SwiGLU (gated) and plain GeLU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import activation, fan_in_init, zeros
+
+
+def init_mlp(rng, cfg: ModelConfig, d_ff: int = 0) -> dict:
+    d = cfg.d_model
+    dff = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    p = {
+        "w_gate": fan_in_init(ks[0], (d, dff), cfg.param_dtype),
+        "w_up": fan_in_init(ks[1], (d, dff), cfg.param_dtype),
+        "w_down": fan_in_init(ks[2], (dff, d), cfg.param_dtype),
+    }
+    if cfg.use_mlp_bias:
+        p["b_up"] = zeros((dff,), cfg.param_dtype)
+        p["b_down"] = zeros((d,), cfg.param_dtype)
+    return p
+
+
+def mlp_forward(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    act = activation(cfg.act)
+    gate = jnp.einsum("btd,df->btf", x, params["w_gate"])
+    up = jnp.einsum("btd,df->btf", x, params["w_up"])
+    if "b_up" in params:
+        up = up + params["b_up"]
+    h = act(gate) * up
+    out = jnp.einsum("btf,fd->btd", h, params["w_down"])
+    if "b_down" in params:
+        out = out + params["b_down"]
+    return out.astype(x.dtype)

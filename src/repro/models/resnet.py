@@ -1,0 +1,197 @@
+"""Paper Table-I ResNet-18 variant with selectable ``end_layer``.
+
+Layer naming follows the paper exactly:
+  Layer1 : stem conv (stride 1 for CIFAR, 2 otherwise)
+  Layer2 : BasicBlock  64, stride 1
+  Layer3 : BasicBlock  64, stride 1
+  Layer4 : BasicBlock 128, stride 2
+  Layer5 : BasicBlock 256, stride 2
+  Layer6 : BasicBlock 512, stride 2
+  head   : adaptive avg-pool + fc (the *server output layer*)
+The client output layer (paper: avg-pool + fc at the cut) is
+``init_client_head`` / ``client_head``.
+
+Parameters are keyed ``layer1..layer6`` so the cross-layer aggregation of
+Eq. (1) can identify common layers across heterogeneous server models by
+name.  BatchNorm running statistics are threaded explicitly as ``state``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import fan_in_init, ones, zeros
+
+
+@dataclass(frozen=True)
+class ResNetConfig:
+    num_classes: int = 10
+    stem_stride: int = 1              # 1 for CIFAR, 2 for STL-10
+    width_mult: float = 1.0           # reduced variants for smoke tests
+    num_layers: int = 6               # paper L = 6
+    image_size: int = 32
+    bn_momentum: float = 0.9
+    dtype: type = jnp.float32
+
+    def channels(self) -> Tuple[int, ...]:
+        base = [64, 64, 64, 128, 256, 512]
+        return tuple(max(8, int(c * self.width_mult)) for c in base)
+
+    def strides(self) -> Tuple[int, ...]:
+        return (self.stem_stride, 1, 1, 2, 2, 2)
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def _conv(params, x, stride):
+    return jax.lax.conv_general_dilated(
+        x, params, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _init_conv(rng, k, cin, cout, dtype):
+    return fan_in_init(rng, (k, k, cin, cout), dtype, fan_in=k * k * cin)
+
+
+def _init_bn(c, dtype):
+    return ({"scale": ones((c,), dtype), "bias": zeros((c,), dtype)},
+            {"mean": zeros((c,), jnp.float32), "var": ones((c,), jnp.float32)})
+
+
+def _bn(params, state, x, train: bool, momentum: float):
+    if train:
+        axes = (0, 1, 2)
+        mean = jnp.mean(x, axes)
+        var = jnp.var(x, axes)
+        new_state = {
+            "mean": momentum * state["mean"] + (1 - momentum) * mean,
+            "var": momentum * state["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = state["mean"], state["var"]
+        new_state = state
+    inv = jax.lax.rsqrt(var + 1e-5)
+    out = (x - mean) * inv * params["scale"] + params["bias"]
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _init_basic_block(rng, cin, cout, dtype):
+    ks = jax.random.split(rng, 3)
+    p: dict = {"conv1": _init_conv(ks[0], 3, cin, cout, dtype),
+               "conv2": _init_conv(ks[1], 3, cout, cout, dtype)}
+    s: dict = {}
+    p["bn1"], s["bn1"] = _init_bn(cout, dtype)
+    p["bn2"], s["bn2"] = _init_bn(cout, dtype)
+    if cin != cout:
+        p["proj"] = _init_conv(ks[2], 1, cin, cout, dtype)
+        p["bn_proj"], s["bn_proj"] = _init_bn(cout, dtype)
+    return p, s
+
+
+def _basic_block(p, s, x, stride, train, momentum):
+    ns = {}
+    h = _conv(p["conv1"], x, stride)
+    h, ns["bn1"] = _bn(p["bn1"], s["bn1"], h, train, momentum)
+    h = jax.nn.relu(h)
+    h = _conv(p["conv2"], h, 1)
+    h, ns["bn2"] = _bn(p["bn2"], s["bn2"], h, train, momentum)
+    if "proj" in p:
+        sc = _conv(p["proj"], x, stride)
+        sc, ns["bn_proj"] = _bn(p["bn_proj"], s["bn_proj"], sc, train, momentum)
+    else:
+        sc = x if stride == 1 else x[:, ::stride, ::stride, :]
+    return jax.nn.relu(h + sc), ns
+
+
+# ---------------------------------------------------------------------------
+# full network
+# ---------------------------------------------------------------------------
+
+
+def layer_names(cfg: ResNetConfig) -> Tuple[str, ...]:
+    return tuple(f"layer{i + 1}" for i in range(cfg.num_layers))
+
+
+def init_resnet(rng, cfg: ResNetConfig) -> Tuple[dict, dict]:
+    """Returns (params, bn_state), keyed layer1..layerL plus 'head'."""
+    chans, strides = cfg.channels(), cfg.strides()
+    params: Dict[str, dict] = {}
+    state: Dict[str, dict] = {}
+    ks = jax.random.split(rng, cfg.num_layers + 1)
+    # layer1: stem conv + bn
+    p1: dict = {"conv": _init_conv(ks[0], 3, 3, chans[0], cfg.dtype)}
+    s1: dict = {}
+    p1["bn"], s1["bn"] = _init_bn(chans[0], cfg.dtype)
+    params["layer1"], state["layer1"] = p1, s1
+    cin = chans[0]
+    for i in range(1, cfg.num_layers):
+        p, s = _init_basic_block(ks[i], cin, chans[i], cfg.dtype)
+        params[f"layer{i + 1}"], state[f"layer{i + 1}"] = p, s
+        cin = chans[i]
+    params["head"] = {"w": fan_in_init(ks[-1], (cin, cfg.num_classes), cfg.dtype),
+                      "b": zeros((cfg.num_classes,), cfg.dtype)}
+    return params, state
+
+
+def resnet_features(params: dict, state: dict, x: jnp.ndarray,
+                    cfg: ResNetConfig, *, start_layer: int = 0,
+                    end_layer: Optional[int] = None, train: bool = False
+                    ) -> Tuple[jnp.ndarray, dict]:
+    """Run layers (start_layer, end_layer]; 1-indexed per the paper.
+    ``start_layer=0, end_layer=3`` runs layer1..layer3 (a client net with
+    l_i = 3); ``start_layer=3`` runs layer4..L (the matching server net)."""
+    end_layer = end_layer or cfg.num_layers
+    strides = cfg.strides()
+    new_state = dict(state)
+    h = x
+    for i in range(start_layer, end_layer):
+        name = f"layer{i + 1}"
+        p, s = params[name], state[name]
+        if i == 0:
+            h = _conv(p["conv"], h, strides[0])
+            h, ns_bn = _bn(p["bn"], s["bn"], h, train, cfg.bn_momentum)
+            h = jax.nn.relu(h)
+            new_state[name] = {"bn": ns_bn}
+        else:
+            h, ns = _basic_block(p, s, h, strides[i], train, cfg.bn_momentum)
+            new_state[name] = ns
+    return h, new_state
+
+
+def head_forward(params: dict, feats: jnp.ndarray) -> jnp.ndarray:
+    """Adaptive average pool + fc."""
+    pooled = jnp.mean(feats, axis=(1, 2))
+    return pooled @ params["w"] + params["b"]
+
+
+def resnet_forward(params: dict, state: dict, x: jnp.ndarray,
+                   cfg: ResNetConfig, *, end_layer: Optional[int] = None,
+                   train: bool = False) -> Tuple[jnp.ndarray, dict]:
+    feats, new_state = resnet_features(params, state, x, cfg,
+                                       end_layer=end_layer, train=train)
+    return head_forward(params["head"], feats), new_state
+
+
+# ---------------------------------------------------------------------------
+# client output layer (paper: avg-pool + fc after the cut layer)
+# ---------------------------------------------------------------------------
+
+
+def init_client_head(rng, cfg: ResNetConfig, end_layer: int) -> dict:
+    cin = cfg.channels()[end_layer - 1]
+    return {"w": fan_in_init(rng, (cin, cfg.num_classes), cfg.dtype),
+            "b": zeros((cfg.num_classes,), cfg.dtype)}
+
+
+client_head_forward = head_forward

@@ -1,0 +1,68 @@
+"""Optional in-model activation sharding constraints (MaxText-style).
+
+``launch``-layer step builders activate the context with the mesh's axis
+sizes; model code then pins hot intermediate activations (e.g. the MoE
+dispatch buffers) with ``lax.with_sharding_constraint``.  When the context is
+inactive (unit tests, single-device runs) every call is a no-op, so model
+code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _sizes() -> Optional[Dict[str, int]]:
+    return getattr(_state, "sizes", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh):
+    """Enable activation constraints for the given mesh (axis name -> size)."""
+    prev = _sizes()
+    _state.sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    try:
+        yield
+    finally:
+        _state.sizes = prev
+
+
+def constrain(x, *dim_axes):
+    """Constrain ``x`` so dim i is sharded over ``dim_axes[i]``: a mesh axis
+    name, a tuple of names, None, or a LIST of such candidates (first one
+    whose size exists and divides the dim wins).  No-op outside an
+    ``activation_sharding`` context.  Each mesh axis is used at most once."""
+    sizes = _sizes()
+    if sizes is None:
+        return x
+    spec = []
+    used: set = set()
+
+    def fits(ax, dim):
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        if any(a not in sizes or a in used for a in axes):
+            return False
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        return n > 1 and dim % n == 0
+
+    for i, cand in enumerate(dim_axes):
+        cands = cand if isinstance(cand, list) else [cand]
+        chosen = None
+        for ax in cands:
+            if ax is None:
+                continue
+            if fits(ax, x.shape[i]):
+                chosen = ax
+                break
+        spec.append(chosen)
+        if chosen is not None:
+            used.update(chosen if isinstance(chosen, tuple) else (chosen,))
+    return jax.lax.with_sharding_constraint(x, P(*spec))

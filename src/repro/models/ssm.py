@@ -1,0 +1,353 @@
+"""State-space and linear-attention mixers: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both implement the *chunked* parallel form for train/prefill — quadratic
+inside a small chunk, linear across chunks via a ``lax.scan`` over chunk
+states — and an O(1)-state single-token decode path.  These are the
+sub-quadratic mixers that make ``long_500k`` runnable for the SSM/hybrid
+assigned architectures.
+
+Mamba2 recurrence (per head, scalar decay a_t = exp(A * dt_t)):
+    h_t = a_t * h_{t-1} + dt_t * x_t (outer) B_t        h: (P, S)
+    y_t = h_t @ C_t + D * x_t
+RWKV6 recurrence (per head, per-key-channel decay w_t in (0,1)):
+    S_t = diag(w_t) S_{t-1} + k_t (outer) v_t           S: (K, V)
+    y_t = r_t @ (S_{t-1} + diag(u) k_t (outer) v_t)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SSMConfig
+from repro.models.common import fan_in_init, init_rmsnorm, rmsnorm, ones, zeros
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+
+
+def _mamba_dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.d_state            # xBC go through the conv
+    return s, d_inner, nheads, conv_ch
+
+
+def init_mamba2(rng, cfg: ModelConfig) -> dict:
+    s, d_inner, nheads, conv_ch = _mamba_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(rng, 4)
+    d_proj = 2 * d_inner + 2 * s.d_state + nheads   # z, xBC, dt
+    return {
+        "in_proj": fan_in_init(ks[0], (d, d_proj), cfg.param_dtype),
+        "conv_w": fan_in_init(ks[1], (s.d_conv, conv_ch), cfg.param_dtype,
+                              fan_in=s.d_conv),
+        "conv_b": zeros((conv_ch,), cfg.param_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "dt_bias": zeros((nheads,), jnp.float32),
+        "D": ones((nheads,), jnp.float32),
+        "out_norm": init_rmsnorm(d_inner, cfg.param_dtype),
+        "out_proj": fan_in_init(ks[2], (d_inner, d), cfg.param_dtype),
+    }
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s, d_inner, nheads, conv_ch = _mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, nheads, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 history: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv1d.  x: (B,T,C), w: (K,C).  ``history`` is the
+    (B,K-1,C) tail of the previous tokens (decode) or None (zero-pad)."""
+    K = w.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)              # (B, T+K-1, C)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _mamba2_split(params, x, cfg):
+    s, d_inner, nheads, conv_ch = _mamba_dims(cfg)
+    proj = jnp.einsum("btd,dp->btp", x, params["in_proj"])
+    z = proj[..., :d_inner]
+    xBC = proj[..., d_inner : d_inner + conv_ch]
+    dt = proj[..., d_inner + conv_ch :]                     # (B,T,H)
+    return z, xBC, dt
+
+
+def _mamba2_core_chunked(xh, B, C, log_a, dt, D, chunk: int):
+    """Chunked SSD.  xh: (B,T,H,P), B/C: (B,T,S), log_a: (B,T,H) per-token log
+    decay (negative), dt: (B,T,H).  Returns y: (B,T,H,P) and final state
+    (B,H,P,S)."""
+    Bb, T0, H, P = xh.shape
+    S = B.shape[-1]
+    Q = min(chunk, T0)
+    pad = (-T0) % Q
+    if pad:
+        # zero-pad: dt=0 and log_a=0 make padded steps identity (decay 1,
+        # zero input), so the final state is unaffected.
+        pw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        xh = jnp.pad(xh, pw)
+        B, C = jnp.pad(B, pw[:3]), jnp.pad(C, pw[:3])
+        log_a, dt = jnp.pad(log_a, pw[:3]), jnp.pad(dt, pw[:3])
+    T = T0 + pad
+    nc = T // Q
+
+    def r(t, *shape):  # reshape time into (chunks, Q)
+        return t.reshape(t.shape[0], nc, Q, *t.shape[2:])
+
+    xh_c, B_c, C_c = r(xh), r(B), r(C)
+    la_c = r(log_a).astype(jnp.float32)                     # (B,nc,Q,H)
+    dt_c = r(dt).astype(jnp.float32)
+    Lc = jnp.cumsum(la_c, axis=2)                           # within-chunk cumulative
+    u = xh_c * dt_c[..., None]                              # weighted input
+
+    # intra-chunk (quadratic in Q): y_t = sum_{i<=t} exp(L_t - L_i) (C_t.B_i) u_i
+    scores = jnp.einsum("bnqs,bnks->bnqk", C_c, B_c)        # (B,nc,Q,Q)
+    seg = Lc[:, :, :, None, :] - Lc[:, :, None, :, :]       # (B,nc,Q,Q,H) = L_t - L_i
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    attn = scores[..., None] * decay                        # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bnqkh,bnkhp->bnqhp", attn.astype(u.dtype), u)
+
+    # chunk summary state: S_n = sum_i exp(L_Q - L_i) u_i (outer) B_i
+    tail = jnp.exp(Lc[:, :, -1:, :] - Lc)                   # (B,nc,Q,H)
+    Sn = jnp.einsum("bnqh,bnqhp,bnqs->bnhps",
+                    tail.astype(u.dtype), u, B_c)           # (B,nc,H,P,S)
+    chunk_decay = jnp.exp(Lc[:, :, -1, :]).astype(jnp.float32)  # (B,nc,H)
+
+    def step(h, inp):
+        sn, dk = inp                                        # (B,H,P,S), (B,H)
+        h_new = h * dk[..., None, None] + sn.astype(jnp.float32)
+        return h_new, h                                     # emit state *before* chunk
+
+    h0 = jnp.zeros((Bb, H, P, S), jnp.float32)
+    hT, h_prev = jax.lax.scan(step, h0,
+                              (jnp.moveaxis(Sn, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                     # (B,nc,H,P,S)
+
+    # inter-chunk: y_t += exp(L_t) C_t . h_{chunk_start}
+    inter_w = jnp.exp(Lc).astype(u.dtype)                   # (B,nc,Q,H)
+    y_inter = jnp.einsum("bnqs,bnhps,bnqh->bnqhp",
+                         C_c, h_prev.astype(u.dtype), inter_w)
+    y = (y_intra + y_inter).reshape(Bb, T, H, P) + D[:, None] * xh * dt[..., None]
+    return y[:, :T0], hT
+
+
+def mamba2_forward(params: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                   cache: Optional[dict] = None
+                   ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    s, d_inner, nheads, conv_ch = _mamba_dims(cfg)
+    P, S = s.head_dim, s.d_state
+    z, xBC, dt = _mamba2_split(params, x, cfg)
+    A = -jnp.exp(params["A_log"])                           # (H,) negative
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+
+    if cache is None or x.shape[1] > 1:
+        conv_hist = cache["conv"] if cache is not None else None
+        new_conv_hist = (jnp.concatenate([cache["conv"], xBC], axis=1)
+                         [:, -(s.d_conv - 1):, :] if cache is not None else None)
+        xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"],
+                           history=conv_hist)
+        xi = xBC[..., :d_inner].reshape(*x.shape[:2], nheads, P)
+        Bm = xBC[..., d_inner : d_inner + S]
+        Cm = xBC[..., d_inner + S :]
+        log_a = dt_sp * A                                   # (B,T,H)
+        y, hT = _mamba2_core_chunked(xi, Bm, Cm, log_a, dt_sp, params["D"],
+                                     s.chunk_size)
+        new_cache = (None if cache is None
+                     else {"conv": new_conv_hist, "state": hT})
+    else:
+        # single-token decode
+        new_conv_hist = jnp.concatenate([cache["conv"], xBC], axis=1)[:, 1:, :]
+        xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"],
+                           history=cache["conv"])
+        xi = xBC[..., :d_inner].reshape(x.shape[0], 1, nheads, P)
+        Bm = xBC[..., d_inner : d_inner + S]                # (B,1,S)
+        Cm = xBC[..., d_inner + S :]
+        a = jnp.exp(dt_sp * A)[:, 0]                        # (B,H)
+        u = (xi * dt_sp[..., None])[:, 0]                   # (B,H,P)
+        h = (cache["state"] * a[..., None, None]
+             + jnp.einsum("bhp,bs->bhps", u.astype(jnp.float32),
+                          Bm[:, 0].astype(jnp.float32)))
+        y = (jnp.einsum("bhps,bs->bhp", h, Cm[:, 0].astype(jnp.float32))
+             + params["D"][:, None] * xi[:, 0] * dt_sp[:, 0, :, None])
+        y = y[:, None].astype(x.dtype)                      # (B,1,H,P)
+        new_cache = {"conv": new_conv_hist, "state": h}
+
+    y = y.reshape(*x.shape[:2], d_inner) * jax.nn.silu(z)
+    y = rmsnorm(params["out_norm"], y, cfg.norm_eps)
+    out = jnp.einsum("bti,id->btd", y, params["out_proj"])
+    return out.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch)
+# ---------------------------------------------------------------------------
+
+
+def _rwkv_dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    K = s.head_dim
+    nheads = cfg.d_model // K
+    return s, nheads, K
+
+
+def init_rwkv6(rng, cfg: ModelConfig) -> dict:
+    """RWKV6 time-mix: token-shift lerp, r/k/v/g projections, data-dependent
+    per-channel decay w via a LoRA on the shifted input, bonus u."""
+    s, H, K = _rwkv_dims(cfg)
+    d = cfg.d_model
+    lora = max(32, d // 16)
+    ks = jax.random.split(rng, 8)
+    return {
+        "mix": 0.5 * ones((5, d), cfg.param_dtype),         # lerp for r,k,v,g,w
+        "wr": fan_in_init(ks[0], (d, d), cfg.param_dtype),
+        "wk": fan_in_init(ks[1], (d, d), cfg.param_dtype),
+        "wv": fan_in_init(ks[2], (d, d), cfg.param_dtype),
+        "wg": fan_in_init(ks[3], (d, d), cfg.param_dtype),
+        "w_base": -6.0 * ones((d,), jnp.float32),           # decay bias
+        "w_lora_a": fan_in_init(ks[4], (d, lora), cfg.param_dtype),
+        "w_lora_b": zeros((lora, d), cfg.param_dtype),
+        "u": zeros((H, K), jnp.float32),                    # bonus
+        "out_norm": init_rmsnorm(d, cfg.param_dtype),
+        "wo": fan_in_init(ks[5], (d, d), cfg.param_dtype),
+    }
+
+
+def init_rwkv6_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s, H, K = _rwkv_dims(cfg)
+    return {
+        "tm_last": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "cm_last": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "state": jnp.zeros((batch, H, K, K), jnp.float32),
+    }
+
+
+def _token_shift(x: jnp.ndarray, last: Optional[jnp.ndarray]) -> jnp.ndarray:
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _wkv_chunked(r, k, v, log_w, u, chunk: int):
+    """Chunked RWKV6 WKV.  r/k/v: (B,T,H,K), log_w: (B,T,H,K) negative,
+    u: (H,K).  Returns y (B,T,H,K) and final state (B,H,K,K)."""
+    Bb, T0, H, K = r.shape
+    Q = min(chunk, T0)
+    pad = (-T0) % Q
+    if pad:
+        pw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, pw), jnp.pad(k, pw), jnp.pad(v, pw)
+        log_w = jnp.pad(log_w, pw)     # log w = 0 -> decay 1, k=0 -> no-op
+    T = T0 + pad
+    nc = T // Q
+
+    def sp(t):
+        return t.reshape(Bb, nc, Q, H, K)
+
+    r_c, k_c, v_c = sp(r), sp(k), sp(v)
+    lw = sp(log_w).astype(jnp.float32)
+    # L_t = sum_{j<=t} log w_j within chunk (w_t multiplies *previous* state)
+    L = jnp.cumsum(lw, axis=2)
+    # intra: y_t = sum_{i<t} (r_t * exp(L_{t-1}-L_i)) . k_i v_i + (r_t*u*k_t).v_t
+    L_prev = L - lw                                         # L_{t-1} (exclusive)
+    rw = r_c.astype(jnp.float32) * jnp.exp(L_prev)          # (B,n,Q,H,K)
+    kw = k_c.astype(jnp.float32) * jnp.exp(-L)
+    scores = jnp.einsum("bnqhk,bnihk->bnhqi", rw, kw)       # i<q strictly
+    strict = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+    scores = jnp.where(strict[None, None, None], scores, 0.0)
+    diag = jnp.einsum("bnqhk,hk,bnqhk->bnqh", r_c.astype(jnp.float32), u,
+                      k_c.astype(jnp.float32))
+    y_intra = (jnp.einsum("bnhqi,bnihk->bnqhk", scores, v_c.astype(jnp.float32))
+               + diag[..., None] * v_c.astype(jnp.float32))
+
+    # chunk summary: S_n = sum_i exp(L_Q - L_i) k_i (outer) v_i ; decay exp(L_Q)
+    tail = jnp.exp(L[:, :, -1:, :, :] - L)                  # (B,n,Q,H,K)
+    Sn = jnp.einsum("bnqhk,bnqhv->bnhkv", (k_c.astype(jnp.float32) * tail),
+                    v_c.astype(jnp.float32))
+    cdecay = jnp.exp(L[:, :, -1])                           # (B,n,H,K)
+
+    def step(S, inp):
+        sn, dk = inp
+        return S * dk[..., None] + sn, S
+
+    S0 = jnp.zeros((Bb, H, K, K), jnp.float32)
+    ST, S_prev = jax.lax.scan(step, S0, (jnp.moveaxis(Sn, 1, 0),
+                                         jnp.moveaxis(cdecay, 1, 0)))
+    S_prev = jnp.moveaxis(S_prev, 0, 1)                     # (B,n,H,K,V)
+    y_inter = jnp.einsum("bnqhk,bnhkv->bnqhv", rw, S_prev)
+    y = (y_intra + y_inter).reshape(Bb, T, H, K)
+    return y[:, :T0], ST
+
+
+def rwkv6_forward(params: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                  cache: Optional[dict] = None
+                  ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    s, H, K = _rwkv_dims(cfg)
+    d = cfg.d_model
+    last = cache["tm_last"] if cache is not None else None
+    xs = _token_shift(x, last)
+    mixed = [x + m * (xs - x) for m in params["mix"]]       # r,k,v,g,w inputs
+    r = jnp.einsum("btd,de->bte", mixed[0], params["wr"]).reshape(*x.shape[:2], H, K)
+    k = jnp.einsum("btd,de->bte", mixed[1], params["wk"]).reshape(*x.shape[:2], H, K)
+    v = jnp.einsum("btd,de->bte", mixed[2], params["wv"]).reshape(*x.shape[:2], H, K)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", mixed[3], params["wg"]))
+    w_dd = (params["w_base"]
+            + jnp.einsum("btd,dl,le->bte", mixed[4], params["w_lora_a"],
+                         params["w_lora_b"]).astype(jnp.float32))
+    log_w = -jnp.exp(w_dd).reshape(*x.shape[:2], H, K)      # (B,T,H,K) < 0
+
+    if cache is None or x.shape[1] > 1:
+        y, ST = _wkv_chunked(r, k, v, log_w, params["u"], s.chunk_size)
+        new_cache = (None if cache is None else
+                     {"tm_last": x[:, -1:], "cm_last": cache["cm_last"],
+                      "state": ST})
+    else:
+        S = cache["state"]                                  # (B,H,K,V)
+        r1 = r[:, 0].astype(jnp.float32)
+        k1 = k[:, 0].astype(jnp.float32)
+        v1 = v[:, 0].astype(jnp.float32)
+        w1 = jnp.exp(log_w[:, 0])                           # (B,H,K)
+        kv = jnp.einsum("bhk,bhv->bhkv", k1, v1)
+        y = jnp.einsum("bhk,bhkv->bhv", r1, S + params["u"][None, :, :, None] * kv)
+        S = S * w1[..., None] + kv
+        y = y[:, None]
+        new_cache = {"tm_last": x, "cm_last": cache["cm_last"], "state": S}
+
+    y = y.reshape(*x.shape[:2], d).astype(x.dtype) * g.reshape(*x.shape[:2], d).astype(x.dtype)
+    y = rmsnorm(params["out_norm"], y, cfg.norm_eps)
+    out = jnp.einsum("btd,de->bte", y, params["wo"])
+    return out.astype(x.dtype), new_cache
+
+
+# --- RWKV channel mix (the FFN of an RWKV block) ---------------------------
+
+
+def init_rwkv_cm(rng, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(rng, 3)
+    return {
+        "mix": 0.5 * ones((2, d), cfg.param_dtype),         # lerp for k, r
+        "wk": fan_in_init(ks[0], (d, cfg.d_ff), cfg.param_dtype),
+        "wv": fan_in_init(ks[1], (cfg.d_ff, d), cfg.param_dtype),
+        "wr": fan_in_init(ks[2], (d, d), cfg.param_dtype),
+    }
+
+
+def rwkv_cm_forward(params: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                    last: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    xs = _token_shift(x, last)
+    xk = x + params["mix"][0] * (xs - x)
+    xr = x + params["mix"][1] * (xs - x)
+    k = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, params["wk"])))
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, params["wr"]))
+    return (r * jnp.einsum("btf,fd->btd", k, params["wv"])).astype(x.dtype)

@@ -1,0 +1,2 @@
+from repro.optim.adam import AdamState, adam_init, adam_update  # noqa: F401
+from repro.optim.schedule import cosine_schedule, make_schedule  # noqa: F401

@@ -1,0 +1,26 @@
+"""Learning-rate schedules.  Paper Table II: cosine annealing from
+eta_max = 1e-3 to eta_min = 1e-6 over T_max = 600 epochs, no warmup."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+
+
+def cosine_schedule(step, base_lr: float, min_lr: float, total_steps: int,
+                    warmup_steps: int = 0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(1.0, warmup_steps)
+    t = jnp.clip((step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps),
+                 0.0, 1.0)
+    cos = min_lr + 0.5 * (base_lr - min_lr) * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def make_schedule(cfg: OptimizerConfig):
+    if cfg.schedule == "cosine":
+        return lambda step: cosine_schedule(step, cfg.lr, cfg.min_lr,
+                                            cfg.total_steps, cfg.warmup_steps)
+    if cfg.schedule == "constant":
+        return lambda step: jnp.full((), cfg.lr, jnp.float32)
+    raise ValueError(cfg.schedule)

@@ -1,0 +1,64 @@
+import os
+
+# Tests run on the default single CPU device; ONLY dryrun.py forces 512
+# placeholder devices.  A couple of sharding tests request 8 local devices —
+# they spawn subprocesses instead of mutating this process's device count.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, MoEConfig, MLAConfig, SSMConfig
+
+F32 = dict(dtype=jnp.float32, param_dtype=jnp.float32)
+
+
+@pytest.fixture(scope="session")
+def tiny_dense():
+    return ModelConfig(name="tiny-dense", arch_type="dense", num_layers=4,
+                       d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                       vocab_size=97, exit_layers=(1, 2), **F32)
+
+
+@pytest.fixture(scope="session")
+def tiny_swa():
+    return ModelConfig(name="tiny-swa", arch_type="dense", num_layers=3,
+                       d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                       vocab_size=97, sliding_window=6, **F32)
+
+
+@pytest.fixture(scope="session")
+def tiny_moe():
+    return ModelConfig(name="tiny-moe", arch_type="moe", num_layers=3,
+                       d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                       vocab_size=97, ffn_pattern=("mlp", "moe", "moe"),
+                       moe=MoEConfig(num_experts=4, top_k=2, d_expert=32,
+                                     num_shared_experts=1, d_shared_expert=32,
+                                     # no-drop capacity: capacity-factor MoE
+                                     # output is batch-context dependent when
+                                     # tokens drop, which would break the
+                                     # prefill/decode consistency check
+                                     capacity_factor=8.0),
+                       exit_layers=(1,), **F32)
+
+
+@pytest.fixture(scope="session")
+def tiny_mamba():
+    return ModelConfig(name="tiny-mamba", arch_type="ssm", num_layers=3,
+                       d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                       vocab_size=97, block_pattern=("mamba2",) * 3,
+                       ffn_pattern=("none",) * 3,
+                       ssm=SSMConfig(d_state=16, head_dim=16, chunk_size=4),
+                       exit_layers=(1,), **F32)
+
+
+@pytest.fixture(scope="session")
+def tiny_rwkv():
+    return ModelConfig(name="tiny-rwkv", arch_type="ssm", num_layers=3,
+                       d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                       vocab_size=97, block_pattern=("rwkv6",) * 3,
+                       ffn_pattern=("rwkv_cm",) * 3,
+                       ssm=SSMConfig(kind="rwkv6", head_dim=16, chunk_size=4),
+                       exit_layers=(1,), **F32)

@@ -1,0 +1,57 @@
+"""Trip-count-aware HLO analysis: a k-layer scan must report k x the
+one-layer dot FLOPs (the property cost_analysis lacks)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import analyze
+
+
+def _scan_fn(k, grad=False):
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def fn(x, W):
+        y, _ = jax.lax.scan(body, x, W)
+        return y.sum()
+
+    f = jax.grad(fn, argnums=1) if grad else fn
+    return jax.jit(f).lower(jnp.zeros((8, 64)),
+                            jnp.zeros((k, 64, 64))).compile().as_text()
+
+
+@pytest.mark.parametrize("k", [1, 4, 16])
+def test_scan_flops_scale_with_trip_count(k):
+    a = analyze(_scan_fn(k))
+    expect = 2 * 8 * 64 * 64 * k
+    assert a["flops"] == pytest.approx(expect, rel=0.01)
+
+
+def test_grad_scan_flops():
+    a1 = analyze(_scan_fn(2, grad=True))
+    a4 = analyze(_scan_fn(8, grad=True))
+    assert a4["flops"] == pytest.approx(4 * a1["flops"], rel=0.02)
+
+
+def test_nested_scan():
+    def inner_body(x, w):
+        return x @ w, None
+
+    def outer_body(x, Ws):
+        y, _ = jax.lax.scan(inner_body, x, Ws)
+        return y, None
+
+    def fn(x, W):
+        y, _ = jax.lax.scan(outer_body, x, W)
+        return y.sum()
+
+    txt = jax.jit(fn).lower(jnp.zeros((8, 32)),
+                            jnp.zeros((3, 5, 32, 32))).compile().as_text()
+    a = analyze(txt)
+    assert a["flops"] == pytest.approx(2 * 8 * 32 * 32 * 15, rel=0.01)
+
+
+def test_collectives_counted_with_trips():
+    # without a multi-device mesh there are no collectives; assert zero
+    a = analyze(_scan_fn(4))
+    assert a["collective_total"] == 0

@@ -1,0 +1,94 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import entropy_exit, flash_attention, rwkv_wkv
+from repro.kernels.ref import (entropy_exit_ref, flash_attention_ref,
+                               rwkv_wkv_ref)
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-4)
+
+
+@pytest.mark.parametrize("B,H,Hkv,T,S,D", [
+    (2, 4, 2, 64, 64, 32),
+    (1, 4, 1, 96, 96, 16),          # MQA, non-pow2 seq
+    (2, 2, 2, 33, 33, 64),          # padding path
+    (1, 8, 4, 128, 128, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, Hkv, T, S, D, dtype):
+    q = jnp.array(RNG.normal(size=(B, H, T, D)), dtype)
+    k = jnp.array(RNG.normal(size=(B, Hkv, S, D)), dtype)
+    v = jnp.array(RNG.normal(size=(B, Hkv, S, D)), dtype)
+    out = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [8, 48])
+def test_flash_attention_sliding_window(window):
+    q = jnp.array(RNG.normal(size=(1, 2, 64, 32)), jnp.float32)
+    k = jnp.array(RNG.normal(size=(1, 2, 64, 32)), jnp.float32)
+    v = jnp.array(RNG.normal(size=(1, 2, 64, 32)), jnp.float32)
+    out = flash_attention(q, k, v, window=window, block_q=16, block_k=16,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("B,V", [(8, 1000), (5, 4097), (16, 128),
+                                 (3, 50000)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_entropy_exit_sweep(B, V, dtype):
+    x = jnp.array(RNG.normal(size=(B, V)) * 3, dtype)
+    tau = 1.5
+    H, ex = entropy_exit(x, tau, interpret=True)
+    Hr, exr = entropy_exit_ref(x, tau)
+    np.testing.assert_allclose(np.asarray(H), np.asarray(Hr), atol=1e-2,
+                               rtol=1e-3)
+    # decisions may differ only where H is within tol of tau
+    diff = np.asarray(ex) != np.asarray(exr.astype(bool))
+    assert np.all(np.abs(np.asarray(Hr)[diff] - tau) < 1e-2)
+
+
+@pytest.mark.parametrize("B,T,H,K,chunk", [
+    (2, 32, 2, 8, 8),
+    (1, 50, 3, 16, 16),             # padding path
+    (2, 64, 4, 32, 32),
+])
+def test_rwkv_wkv_sweep(B, T, H, K, chunk):
+    r = jnp.array(RNG.normal(size=(B, T, H, K)), jnp.float32)
+    k = jnp.array(RNG.normal(size=(B, T, H, K)), jnp.float32)
+    v = jnp.array(RNG.normal(size=(B, T, H, K)), jnp.float32)
+    lw = -jnp.array(RNG.uniform(0.05, 1.0, size=(B, T, H, K)), jnp.float32)
+    u = jnp.array(RNG.normal(size=(H, K)), jnp.float32)
+    y = rwkv_wkv(r, k, v, lw, u, chunk=chunk, interpret=True)
+
+    def flat(x):
+        return jnp.moveaxis(x, 2, 1).reshape(B * H, T, K)
+
+    yr = rwkv_wkv_ref(flat(r), flat(k), flat(v), flat(lw),
+                      jnp.broadcast_to(u[None], (B, H, K)).reshape(B * H, K))
+    yr = jnp.moveaxis(yr.reshape(B, H, T, K), 1, 2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=5e-4,
+                               rtol=1e-3)
+
+
+def test_rwkv_wkv_bf16_inputs():
+    B, T, H, K = 1, 32, 2, 16
+    r = jnp.array(RNG.normal(size=(B, T, H, K)), jnp.bfloat16)
+    k = jnp.array(RNG.normal(size=(B, T, H, K)), jnp.bfloat16)
+    v = jnp.array(RNG.normal(size=(B, T, H, K)), jnp.bfloat16)
+    lw = -jnp.array(RNG.uniform(0.1, 1.0, size=(B, T, H, K)), jnp.float32)
+    u = jnp.array(RNG.normal(size=(H, K)), jnp.float32)
+    y = rwkv_wkv(r, k, v, lw, u, chunk=16, interpret=True)
+    assert y.shape == (B, T, H, K)
+    assert np.isfinite(np.asarray(y, np.float32)).all()

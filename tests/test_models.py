@@ -1,0 +1,144 @@
+"""Backbone model behaviour: shapes, NaN-freedom, cache consistency, and
+chunked-scan correctness against naive recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.backbone import (backbone_forward, build_plan, init_backbone,
+                                   init_cache)
+from repro.models.ssm import _mamba2_core_chunked, _wkv_chunked
+
+
+def _roundtrip(cfg, T=8, extra=None):
+    """full forward == prefill + 2 decode steps on the trailing tokens."""
+    extra = extra or {}
+    params = init_backbone(jax.random.PRNGKey(0), cfg)
+    B = 2
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T + 2), 0,
+                              cfg.vocab_size)
+    full = backbone_forward(params, cfg, tokens=toks, **extra)
+    cache = init_cache(cfg, B, 16, jnp.float32)
+    pre = backbone_forward(params, cfg, tokens=toks[:, :T], cache=cache,
+                           cache_len=jnp.zeros((), jnp.int32), **extra)
+    d1 = backbone_forward(params, cfg, tokens=toks[:, T : T + 1],
+                          cache=pre.cache,
+                          cache_len=jnp.full((), T, jnp.int32), **extra)
+    d2 = backbone_forward(params, cfg, tokens=toks[:, T + 1 :],
+                          cache=d1.cache,
+                          cache_len=jnp.full((), T + 1, jnp.int32), **extra)
+    np.testing.assert_allclose(pre.logits, full.logits[:, :T], atol=2e-4)
+    np.testing.assert_allclose(d1.logits[:, 0], full.logits[:, T], atol=2e-4)
+    np.testing.assert_allclose(d2.logits[:, 0], full.logits[:, T + 1],
+                               atol=2e-4)
+
+
+def test_dense_forward_and_exits(tiny_dense):
+    cfg = tiny_dense
+    params = init_backbone(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (3, 8), 0, cfg.vocab_size)
+    out = backbone_forward(params, cfg, tokens=toks)
+    assert out.logits.shape == (3, 8, cfg.vocab_size)
+    assert len(out.exit_logits) == 2
+    for e in out.exit_logits:
+        assert e.shape == (3, 8, cfg.vocab_size)
+        assert not bool(jnp.isnan(e).any())
+    assert not bool(jnp.isnan(out.logits).any())
+
+
+def test_plan_segments(tiny_dense):
+    plan = build_plan(tiny_dense)
+    assert len(plan) == 3                       # exits at 1,2 -> 3 segments
+    assert sum(r.length for seg in plan for r in seg) == tiny_dense.num_layers
+
+
+@pytest.mark.parametrize("fixture", ["tiny_dense", "tiny_swa", "tiny_mamba",
+                                     "tiny_rwkv", "tiny_moe"])
+def test_prefill_decode_consistency(fixture, request):
+    _roundtrip(request.getfixturevalue(fixture))
+
+
+def test_mamba2_chunked_vs_naive():
+    rng = np.random.default_rng(0)
+    B, T, H, P, S = 2, 12, 3, 4, 5
+    xh = jnp.array(rng.normal(size=(B, T, H, P)), jnp.float32)
+    Bm = jnp.array(rng.normal(size=(B, T, S)), jnp.float32)
+    Cm = jnp.array(rng.normal(size=(B, T, S)), jnp.float32)
+    dt = jnp.array(rng.uniform(0.1, 1.0, size=(B, T, H)), jnp.float32)
+    A = -jnp.array(rng.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    D = jnp.array(rng.normal(size=(H,)), jnp.float32)
+    log_a = dt * A
+
+    h = np.zeros((B, H, P, S), np.float32)
+    ys = []
+    for t in range(T):
+        a = np.exp(np.asarray(log_a)[:, t])
+        u = np.asarray(xh)[:, t] * np.asarray(dt)[:, t, :, None]
+        h = h * a[..., None, None] + np.einsum("bhp,bs->bhps", u,
+                                               np.asarray(Bm)[:, t])
+        y = (np.einsum("bhps,bs->bhp", h, np.asarray(Cm)[:, t])
+             + np.asarray(D)[:, None] * np.asarray(xh)[:, t]
+             * np.asarray(dt)[:, t, :, None])
+        ys.append(y)
+    ref = np.stack(ys, 1)
+
+    for Q in (3, 4, 12):                        # incl. non-divisible padding
+        y, hT = _mamba2_core_chunked(xh, Bm, Cm, log_a, dt, D, Q)
+        np.testing.assert_allclose(np.asarray(y), ref, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(hT), h, atol=2e-5)
+
+
+def test_wkv_chunked_vs_naive():
+    rng = np.random.default_rng(1)
+    B, T, H, K = 2, 10, 2, 4
+    r = jnp.array(rng.normal(size=(B, T, H, K)), jnp.float32)
+    k = jnp.array(rng.normal(size=(B, T, H, K)), jnp.float32)
+    v = jnp.array(rng.normal(size=(B, T, H, K)), jnp.float32)
+    log_w = -jnp.array(rng.uniform(0.05, 1.0, size=(B, T, H, K)), jnp.float32)
+    u = jnp.array(rng.normal(size=(H, K)), jnp.float32)
+
+    S = np.zeros((B, H, K, K), np.float32)
+    ys = []
+    for t in range(T):
+        kt, vt, rt = (np.asarray(x)[:, t] for x in (k, v, r))
+        wt = np.exp(np.asarray(log_w)[:, t])
+        kv = np.einsum("bhk,bhv->bhkv", kt, vt)
+        ys.append(np.einsum("bhk,bhkv->bhv", rt,
+                            S + np.asarray(u)[None, :, :, None] * kv))
+        S = S * wt[..., None] + kv
+    ref = np.stack(ys, 1)
+
+    for Q in (4, 5, 10):
+        y, ST = _wkv_chunked(r, k, v, log_w, u, Q)
+        np.testing.assert_allclose(np.asarray(y), ref, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(ST), S, atol=2e-5)
+
+
+def test_split_stop_gradient_blocks_server_loss(tiny_dense):
+    """The defining Hetero-SplitEE property: the server (final-head) loss has
+    ZERO gradient w.r.t. client-side layers of each example's group, while
+    exit losses reach exactly the layers at or below their cut."""
+    cfg = tiny_dense
+    params = init_backbone(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 6), 0, cfg.vocab_size)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (4, 6), 0,
+                                cfg.vocab_size)
+    # every example cut at boundary 0 (layer 1)
+    split_ids = jnp.zeros((4,), jnp.int32)
+
+    def server_loss(p):
+        out = backbone_forward(p, cfg, tokens=toks, split_ids=split_ids)
+        from repro.core.losses import softmax_cross_entropy
+        return softmax_cross_entropy(out.logits, labels)
+
+    g = jax.grad(server_loss)(params)
+    # embedding + segment 0 (layer 0..1) must receive zero gradient
+    emb_norm = sum(float(jnp.abs(x).sum())
+                   for x in jax.tree.leaves(g["embed"]))
+    seg0_norm = sum(float(jnp.abs(x).sum())
+                    for x in jax.tree.leaves(g["segments"][0]))
+    seg1_norm = sum(float(jnp.abs(x).sum())
+                    for x in jax.tree.leaves(g["segments"][1]))
+    assert emb_norm == 0.0
+    assert seg0_norm == 0.0
+    assert seg1_norm > 0.0                       # layers above the cut train

@@ -1,0 +1,116 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.config import HeteroProfile, OptimizerConfig
+from repro.core.aggregation import (cross_layer_aggregate,
+                                    participation_counts)
+from repro.core.inference import exit_decision
+from repro.core.losses import softmax_cross_entropy, softmax_entropy
+from repro.data.pipeline import ClientPartitioner
+from repro.optim.schedule import cosine_schedule
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(st.lists(st.integers(1, 5), min_size=2, max_size=6),
+       st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_eq1_aggregation_matches_loop_oracle(splits, seed):
+    """For random split assignments and random params, the framework's
+    aggregation equals a literal per-layer mean over C_l."""
+    L = 6
+    rng = np.random.default_rng(seed)
+    models = []
+    for li in splits:
+        m = {f"layer{l}": {"w": jnp.array(rng.normal(size=(3,)), jnp.float32)}
+             for l in range(li + 1, L + 1)}
+        m["head"] = {"w": jnp.array(rng.normal(size=(3,)), jnp.float32)}
+        models.append(m)
+    out = cross_layer_aggregate(models, splits)
+
+    for l in range(1, L + 1):
+        key = f"layer{l}"
+        members = [i for i, li in enumerate(splits) if li < l]
+        if not members:
+            continue
+        mean = np.mean([np.asarray(models[i][key]["w"]) for i in members],
+                       axis=0)
+        for i in members:
+            np.testing.assert_allclose(np.asarray(out[i][key]["w"]), mean,
+                                       atol=1e-5)
+    # non-members keep structure: no layer appears that wasn't there
+    for i, li in enumerate(splits):
+        assert set(out[i].keys()) == set(models[i].keys())
+
+
+@given(st.lists(st.integers(1, 5), min_size=1, max_size=8))
+@settings(**SETTINGS)
+def test_participation_counts_partition(splits):
+    nc, ns = participation_counts(splits, num_layers=6)
+    for l in range(6):
+        assert nc[l] + ns[l] == len(splits)
+        assert nc[l] == sum(1 for s in splits if l < s)
+
+
+@given(st.integers(0, 2 ** 16), st.floats(0.1, 3.9))
+@settings(**SETTINGS)
+def test_exit_decision_monotone_in_tau(seed, tau):
+    """Exit sets grow monotonically with tau: exits(tau) ⊆ exits(tau+d)."""
+    rng = np.random.default_rng(seed)
+    logits = jnp.array(rng.normal(size=(16, 10)) * 2, jnp.float32)
+    lo = np.asarray(exit_decision(logits, tau))
+    hi = np.asarray(exit_decision(logits, tau + 0.5))
+    assert np.all(hi[lo])                      # lo exits is a subset
+
+
+@given(st.integers(2, 20))
+@settings(**SETTINGS)
+def test_entropy_bounds(classes):
+    rng = np.random.default_rng(classes)
+    logits = jnp.array(rng.normal(size=(8, classes)) * 3, jnp.float32)
+    H = np.asarray(softmax_entropy(logits))
+    assert np.all(H >= -1e-5)
+    assert np.all(H <= np.log(classes) + 1e-5)
+    # uniform logits -> max entropy
+    Hu = float(softmax_entropy(jnp.zeros((1, classes)))[0])
+    assert abs(Hu - np.log(classes)) < 1e-5
+
+
+@given(st.integers(1, 12), st.integers(50, 300), st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_partitioner_covers_all_samples_once(n_clients, n, seed):
+    x = np.arange(n)[:, None].astype(np.float32)
+    y = np.arange(n).astype(np.int32)
+    shards = ClientPartitioner(n_clients, seed=seed).split(x, y)
+    seen = np.concatenate([s[1] for s in shards])
+    assert sorted(seen.tolist()) == list(range(n))
+    sizes = [len(s[1]) for s in shards]
+    assert max(sizes) - min(sizes) <= 1        # near-uniform
+
+
+@given(st.integers(1, 1000), st.integers(2, 2000))
+@settings(**SETTINGS)
+def test_cosine_schedule_bounds(step, total):
+    lr = float(cosine_schedule(step, 1e-3, 1e-6, total))
+    assert 1e-6 - 1e-9 <= lr <= 1e-3 + 1e-9
+    # endpoint values (paper Table II), fp32 precision
+    assert abs(float(cosine_schedule(0, 1e-3, 1e-6, total)) - 1e-3) < 1e-9
+    assert abs(float(cosine_schedule(total, 1e-3, 1e-6, total)) - 1e-6) < 1e-9
+
+
+@given(st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_masked_ce_matches_subset_ce(seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.array(rng.normal(size=(10, 7)), jnp.float32)
+    labels = jnp.array(rng.integers(0, 7, 10), jnp.int32)
+    mask = jnp.array(rng.integers(0, 2, 10), jnp.float32)
+    if float(mask.sum()) == 0:
+        return
+    full = float(softmax_cross_entropy(logits, labels, mask))
+    idx = np.nonzero(np.asarray(mask))[0]
+    sub = float(softmax_cross_entropy(logits[idx], labels[idx]))
+    assert abs(full - sub) < 1e-5

@@ -1,0 +1,71 @@
+"""Sharding recipes: spec construction on a small host-device mesh (runs in a
+subprocess so the 8-device XLA flag never leaks into this process)."""
+import json
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+from jax.sharding import PartitionSpec as P
+from repro import configs as configs_mod
+from repro.launch import shardings as sh
+from repro.launch.inputs import abstract_params, train_input_specs
+from repro.config import ShapeConfig
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+out = {}
+
+cfg = configs_mod.get("glm4-9b").config()
+params = abstract_params(cfg)
+for scheme in ("greedy", "megatron"):
+    rec = sh.ShardingRecipe(scheme=scheme)
+    specs = sh.param_specs(params, cfg, mesh, rec)
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    named = {"/".join(str(p) for p in path): str(spec)
+             for path, spec in flat}
+    # one representative leaf each
+    out[scheme] = {
+        "n_leaves": len(flat),
+        "any_model": any("model" in s for s in named.values()),
+        "embed": [s for k, s in named.items() if k.startswith("['embed']")][0],
+    }
+
+# megatron rules: wq sharded on heads, wo on heads (row), w_down on f
+cfgm = configs_mod.get("command-r-35b").config()   # H=64 divisible
+pm = abstract_params(cfgm)
+specsm = sh.param_specs(pm, cfgm, mesh, sh.ShardingRecipe(scheme="megatron"))
+seg = specsm["segments"][0][0]
+out["mega_wq"] = str(seg["mixer"]["wq"])
+out["mega_wo"] = str(seg["mixer"]["wo"])
+out["mega_wdown"] = str(seg["ffn"]["w_down"])
+
+# batch specs: divisible batch shards, batch=1 replicates
+bs = sh.batch_specs({"tokens": jax.ShapeDtypeStruct((8, 16), jax.numpy.int32),
+                     "one": jax.ShapeDtypeStruct((1, 16), jax.numpy.int32)},
+                    mesh)
+out["batch8"] = str(bs["tokens"]); out["batch1"] = str(bs["one"])
+print(json.dumps(out))
+"""
+
+
+def test_sharding_recipes_subprocess():
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                                        "JAX_PLATFORMS": "cpu"},
+                       cwd=".", timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    for scheme in ("greedy", "megatron"):
+        assert out[scheme]["any_model"], scheme
+        assert out[scheme]["n_leaves"] > 20
+    # megatron: wq (layer, d, H, hd) -> H on model; wo (layer, H, hd, d) ->
+    # H on model (row); w_down (layer, f, d) -> f on model
+    assert "'model'" in out["mega_wq"]
+    assert "'model'" in out["mega_wo"]
+    assert "'model'" in out["mega_wdown"]
+    assert "'data'" in out["batch8"]
+    assert out["batch1"] == "PartitionSpec()"

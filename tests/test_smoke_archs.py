@@ -1,0 +1,135 @@
+"""Deliverable (f): per-assigned-architecture smoke tests — a REDUCED variant
+of the same family (<=4 layers, d_model<=512, <=4 experts) runs one forward
+and one fused Hetero-SplitEE train step on CPU; output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as configs_mod
+from repro.config import (HeteroProfile, OptimizerConfig, SplitEEConfig,
+                          TrainConfig)
+from repro.core.spmd import (StepConfig, boundary_ids_for_batch,
+                             make_serve_step, make_train_step)
+from repro.models.backbone import backbone_forward, init_backbone, init_cache
+from repro.optim import adam_init
+
+ARCHS = configs_mod.all_arch_ids()
+
+
+def _reduced_limits_ok(cfg):
+    assert cfg.num_layers <= 4
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+
+
+def _batch_for(cfg, B, T):
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    batch = {"tokens": jax.random.randint(ks[0], (B, T), 0, cfg.vocab_size),
+             "labels": jax.random.randint(ks[1], (B, T), 0, cfg.vocab_size)}
+    if cfg.arch_type == "audio":
+        batch["enc"] = jnp.zeros((B, cfg.cross_source_len, 768), cfg.dtype)
+    if cfg.arch_type == "vlm":
+        from repro.models import frontend as fe
+        P = 4
+        batch["embeds"] = jnp.zeros((B, P, fe.SIGLIP_PATCH_DIM), cfg.dtype)
+        batch["labels"] = jnp.concatenate(
+            [jnp.zeros((B, P), jnp.int32), batch["labels"]], axis=1)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = configs_mod.get(arch).smoke()
+    _reduced_limits_ok(cfg)
+    params = init_backbone(jax.random.PRNGKey(0), cfg)
+    B, T = 2, 16
+    batch = _batch_for(cfg, B, T)
+    out = backbone_forward(params, cfg, tokens=batch["tokens"],
+                           embeds=batch.get("embeds"), enc=batch.get("enc"))
+    T_out = batch["labels"].shape[1]
+    assert out.logits.shape == (B, T_out, cfg.vocab_size)
+    assert not bool(jnp.isnan(out.logits).any())
+    for e in out.exit_logits:
+        assert e.shape == (B, T_out, cfg.vocab_size)
+        assert not bool(jnp.isnan(e).any())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = configs_mod.get(arch).smoke()
+    prof = HeteroProfile(split_layers=(cfg.exit_layers[0],) * 2
+                         + (cfg.exit_layers[-1],) * 2)
+    sc = StepConfig(model=cfg, splitee=SplitEEConfig(profile=prof),
+                    train=TrainConfig(optimizer=OptimizerConfig(
+                        lr=1e-3, total_steps=10)))
+    params = init_backbone(jax.random.PRNGKey(0), cfg)
+    opt = adam_init(params, sc.train.optimizer)
+    B, T = 4, 16
+    batch = _batch_for(cfg, B, T)
+    batch["split_ids"] = boundary_ids_for_batch(prof, cfg, B)
+    step = jax.jit(make_train_step(sc))
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["server_loss"]))
+    for k, v in metrics.items():
+        assert np.isfinite(float(v)), k
+    # parameters actually moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "zamba2-1.2b", "rwkv6-3b",
+                                  "deepseek-v3-671b", "whisper-small"])
+def test_smoke_decode_step(arch):
+    cfg = configs_mod.get(arch).smoke()
+    prof = HeteroProfile(split_layers=(cfg.exit_layers[0],) * 4)
+    sc = StepConfig(model=cfg, splitee=SplitEEConfig(
+        profile=prof, entropy_threshold=1.0), train=TrainConfig())
+    params = init_backbone(jax.random.PRNGKey(0), cfg)
+    B = 4
+    cache = init_cache(cfg, B, 32, cfg.dtype)
+    serve = jax.jit(make_serve_step(sc, boundary=0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 0,
+                              cfg.vocab_size)
+    kw = {}
+    if cfg.arch_type == "audio":
+        kw["enc"] = jnp.zeros((B, cfg.cross_source_len, 768), cfg.dtype)
+    out = serve(params, toks, cache, jnp.zeros((), jnp.int32), **kw)
+    assert out["logits"].shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(out["logits"], np.float32)).all()
+
+
+def test_full_configs_match_assignment():
+    """The full configs carry the exact assigned hyper-parameters."""
+    expect = {
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+        "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+    }
+    for arch, (L, d, H, kv, dff, V) in expect.items():
+        cfg = configs_mod.get(arch).config()
+        assert cfg.num_layers == L, arch
+        assert cfg.d_model == d, arch
+        assert cfg.num_heads == H, arch
+        assert cfg.num_kv_heads == kv, arch
+        assert cfg.d_ff == dff, arch
+        assert cfg.vocab_size == V, arch
+        assert cfg.source, arch                 # citation present
+    # family checks
+    assert configs_mod.get("deepseek-v3-671b").config().moe.num_experts == 256
+    assert configs_mod.get("deepseek-v3-671b").config().moe.top_k == 8
+    assert configs_mod.get("qwen3-moe-235b-a22b").config().moe.num_experts == 128
+    assert configs_mod.get("zamba2-1.2b").config().ssm.d_state == 64
+    assert "shared_attn" in configs_mod.get("zamba2-1.2b").config().block_pattern
+    assert configs_mod.get("rwkv6-3b").config().block_pattern[0] == "rwkv6"
+    assert configs_mod.get("deepseek-v3-671b").config().mla is not None

@@ -1,0 +1,146 @@
+"""Hetero-SplitEE core semantics: Eq. (1) aggregation, the two strategies,
+and the paper's structural guarantees."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
+from repro.core.aggregation import (cross_layer_aggregate,
+                                    participation_counts)
+from repro.core.splitee import MLPSplitModel
+from repro.core.strategies import HeteroTrainer
+
+
+def _blob_data(n, d, classes, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(classes, d)) * 2.0
+    y = rng.integers(0, classes, n).astype(np.int32)
+    x = (centers[y] + rng.normal(size=(n, d))).astype(np.float32)
+    return x, y
+
+
+def _trainer(strategy, splits=(1, 2, 3), rounds=0, **kw):
+    x, y = _blob_data(600, 16, 3)
+    model = MLPSplitModel(in_dim=16, hidden=32, num_classes=3, num_layers=4,
+                          seed=0)
+    parts = [(x[i::3], y[i::3]) for i in range(3)]
+    tr = HeteroTrainer(model,
+                       SplitEEConfig(profile=HeteroProfile(splits),
+                                     strategy=strategy, **kw),
+                       OptimizerConfig(lr=3e-3, total_steps=50),
+                       parts, batch_size=64)
+    if rounds:
+        tr.run(rounds)
+    return tr, (x, y)
+
+
+# ---------------------------------------------------------------------------
+# Eq. (1)
+# ---------------------------------------------------------------------------
+
+
+def test_cross_layer_aggregate_matches_manual():
+    rng = np.random.default_rng(0)
+    # 3 clients with splits 1,2,3 over a 4-layer net: server models contain
+    # layers {2,3,4}, {3,4}, {4} + head
+    def mk(keys):
+        return {k: {"w": jnp.array(rng.normal(size=(2, 2)), jnp.float32)}
+                for k in keys}
+    s1 = mk(["layer2", "layer3", "layer4", "head"])
+    s2 = mk(["layer3", "layer4", "head"])
+    s3 = mk(["layer4", "head"])
+    out = cross_layer_aggregate([s1, s2, s3], [1, 2, 3])
+
+    # layer2: only client 1 -> unchanged
+    np.testing.assert_array_equal(out[0]["layer2"]["w"], s1["layer2"]["w"])
+    # layer3: mean of clients 1,2
+    m3 = (s1["layer3"]["w"] + s2["layer3"]["w"]) / 2
+    np.testing.assert_allclose(out[0]["layer3"]["w"], m3, atol=1e-6)
+    np.testing.assert_allclose(out[1]["layer3"]["w"], m3, atol=1e-6)
+    # layer4 + head: mean of all three, broadcast back to every member
+    for key in ("layer4", "head"):
+        m = (s1[key]["w"] + s2[key]["w"] + s3[key]["w"]) / 3
+        for i in range(3):
+            np.testing.assert_allclose(out[i][key]["w"], m, atol=1e-6)
+
+
+def test_aggregate_permutation_invariant():
+    rng = np.random.default_rng(1)
+    models = [{"layer3": {"w": jnp.array(rng.normal(size=(3,)), jnp.float32)},
+               "head": {"w": jnp.array(rng.normal(size=(3,)), jnp.float32)}}
+              for _ in range(4)]
+    a = cross_layer_aggregate(models, [2, 2, 2, 2])
+    perm = [2, 0, 3, 1]
+    b = cross_layer_aggregate([models[i] for i in perm],
+                              [2, 2, 2, 2])
+    np.testing.assert_allclose(a[0]["layer3"]["w"], b[0]["layer3"]["w"],
+                               atol=1e-6)
+
+
+def test_participation_counts():
+    nc, ns = participation_counts([1, 2, 2, 3], num_layers=4)
+    assert nc == [4, 3, 1, 0]       # layer0 client-side for all, etc.
+    assert ns == [0, 1, 3, 4]
+
+
+# ---------------------------------------------------------------------------
+# strategies (Alg. 1 / Alg. 2 structure)
+# ---------------------------------------------------------------------------
+
+
+def test_sequential_shares_one_server():
+    tr, _ = _trainer("sequential")
+    assert len(tr.servers) == 1
+    assert tr.server_lr_div == 3.0              # lr / N (paper Table II)
+
+
+def test_sequential_server_steps_per_round():
+    tr, _ = _trainer("sequential")
+    tr.train_round(local_epochs=2)
+    # shared server updated N x E = 3 x 2 = 6 times
+    assert int(tr.server_opts[0].step) == 6
+    # each client updated E = 2 times
+    assert all(int(o.step) == 2 for o in tr.client_opts)
+
+
+def test_averaging_syncs_common_layers():
+    tr, _ = _trainer("averaging", rounds=2)
+    # after aggregation the deepest common layer (layer4, head) is identical
+    for key in ("layer4", "head"):
+        w0 = tr.servers[0]["trainable"][key]["w"]
+        for s in tr.servers[1:]:
+            np.testing.assert_allclose(w0, s["trainable"][key]["w"], atol=1e-6)
+    # layer2 exists only in client-0's server model
+    assert "layer2" in tr.servers[0]["trainable"]
+    assert "layer2" not in tr.servers[2]["trainable"]
+
+
+def test_distributed_does_not_sync():
+    tr, _ = _trainer("distributed", splits=(2, 2, 2), rounds=2)
+    w = [np.asarray(s["trainable"]["head"]["w"]) for s in tr.servers]
+    assert not np.allclose(w[0], w[1])          # independent training drifts
+
+
+def test_same_seed_init_property():
+    """Paper: all models initialized from the same random seed — common
+    layers start identical across clients."""
+    model = MLPSplitModel(in_dim=8, hidden=16, num_classes=3, num_layers=4)
+    s1 = model.make_server(1)["trainable"]
+    s3 = model.make_server(3)["trainable"]
+    np.testing.assert_array_equal(s1["layer4"]["w"], s3["layer4"]["w"])
+    c1 = model.make_client(2)["trainable"]
+    c2 = model.make_client(3)["trainable"]
+    np.testing.assert_array_equal(c1["layers"]["layer2"]["w"],
+                                  c2["layers"]["layer2"]["w"])
+
+
+def test_training_learns_and_adaptive_inference():
+    tr, (x, y) = _trainer("averaging", rounds=25)
+    ev = tr.evaluate(x[:300], y[:300], batch_size=100)
+    assert min(ev["client_acc"]) > 0.8
+    assert min(ev["server_acc"]) > 0.8
+    # threshold monotonicity: higher tau_H -> more client exits
+    lo = tr.evaluate_adaptive(x[:300], y[:300], tau=0.05, batch_size=100)
+    hi = tr.evaluate_adaptive(x[:300], y[:300], tau=1.0, batch_size=100)
+    assert all(h >= l for h, l in zip(hi["client_ratio"], lo["client_ratio"]))

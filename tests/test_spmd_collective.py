@@ -1,0 +1,54 @@
+"""The SPMD collective form of Eq. (1): ``masked_mean_over_axis`` under
+``shard_map`` on a multi-device mesh equals the per-client loop oracle.
+Runs in a subprocess so the 8-device XLA flag never leaks."""
+import json
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.core.aggregation import masked_mean_over_axis
+
+mesh = jax.make_mesh((8,), ("clients",))
+rng = np.random.default_rng(0)
+
+# 8 clients, layer participation mask (paper C_l): clients 3..7 hold layer l
+values = jnp.array(rng.normal(size=(8, 4)), jnp.float32)
+participate = jnp.array([0, 0, 0, 1, 1, 1, 1, 1], jnp.float32)
+
+def agg(v, p):
+    return masked_mean_over_axis(v, p[0], "clients")
+
+out = shard_map(agg, mesh=mesh, in_specs=(P("clients"), P("clients")),
+                out_specs=P("clients"))(values, participate[:, None])
+
+members = np.nonzero(np.asarray(participate))[0]
+mean = np.asarray(values)[members].mean(0)
+res = {"ok_members": True, "ok_passthrough": True}
+for i in range(8):
+    got = np.asarray(out)[i]
+    want = mean if participate[i] else np.asarray(values)[i]
+    key = "ok_members" if participate[i] else "ok_passthrough"
+    if not np.allclose(got, want, atol=1e-6):
+        res[key] = False
+print(json.dumps(res))
+"""
+
+
+def test_masked_mean_psum_matches_loop():
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"},
+                       cwd=".", timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["ok_members"], "members must receive the C_l mean"
+    assert out["ok_passthrough"], "non-members keep their value"
