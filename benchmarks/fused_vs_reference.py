@@ -1,0 +1,113 @@
+"""Fused vs. reference engine throughput (rounds/sec) on the Averaging
+strategy — the headline metric for the scan+vmap engine (docs/ENGINES.md).
+
+Both engines train the same N-client MLP split workload on identical data;
+the reference engine pays two jit dispatches plus a ``float(loss)`` host sync
+per client per minibatch, the fused engine runs the whole chunk as one
+compiled scan.  Emits ``BENCH_fused.json`` with the schema validated by
+``tests/test_bench_smoke.py``.
+
+  PYTHONPATH=src python -m benchmarks.fused_vs_reference
+  PYTHONPATH=src python -m benchmarks.fused_vs_reference --rounds 200
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
+from repro.core.fused import FusedHeteroTrainer
+from repro.core.splitee import MLPSplitModel
+from repro.core.strategies import HeteroTrainer
+from repro.data.pipeline import ClientPartitioner
+
+SCHEMA_KEYS = ("benchmark", "config", "reference", "fused", "speedup",
+               "max_metric_delta")
+
+
+def _make_trainer(cls, splits: Sequence[int], parts, *, batch_size: int,
+                  total_steps: int):
+    model = MLPSplitModel(in_dim=32, hidden=64, num_classes=5, num_layers=4,
+                          seed=0)
+    return cls(model,
+               SplitEEConfig(profile=HeteroProfile(tuple(splits)),
+                             strategy="averaging"),
+               OptimizerConfig(lr=3e-3, total_steps=total_steps),
+               parts, batch_size=batch_size)
+
+
+def run(rounds: int = 60, clients: int = 4, batch_size: int = 64,
+        local_epochs: int = 1, out: str = "BENCH_fused.json") -> List[Dict]:
+    """Time both engines over ``rounds`` post-warmup rounds and write the
+    comparison JSON.  Returns benchmark rows for benchmarks/run.py."""
+    if rounds < 1 or clients < 1:
+        raise ValueError(f"need rounds >= 1 and clients >= 1, "
+                         f"got rounds={rounds} clients={clients}")
+    splits = [1 + (i % 3) for i in range(clients)]         # hetero cuts 1/2/3
+    rng = np.random.default_rng(0)
+    classes, d = 5, 32
+    centers = rng.normal(size=(classes, d)) * 2.0
+    y = rng.integers(0, classes, 4096).astype(np.int32)
+    x = (centers[y] + rng.normal(size=(4096, d))).astype(np.float32)
+    parts = ClientPartitioner(clients, seed=0).split(x, y)
+    total_steps = 4 * rounds * local_epochs + 16
+
+    def time_engine(cls, **run_kw):
+        tr = _make_trainer(cls, splits, parts, batch_size=batch_size,
+                           total_steps=total_steps)
+        tr.run(rounds, local_epochs, **run_kw)             # warmup + compile
+        t0 = time.perf_counter()
+        tr.run(rounds, local_epochs, **run_kw)
+        wall = time.perf_counter() - t0
+        return tr, wall
+
+    ref_tr, ref_wall = time_engine(HeteroTrainer)
+    fus_tr, fus_wall = time_engine(FusedHeteroTrainer, chunk_rounds=rounds)
+
+    # engines consumed identical data: timed-window metrics must agree
+    deltas = [max(abs(a.client_loss - b.client_loss),
+                  abs(a.server_loss - b.server_loss))
+              for a, b in zip(ref_tr.history, fus_tr.history)]
+    result = {
+        "benchmark": "fused_vs_reference",
+        "config": {"clients": clients, "splits": splits, "rounds": rounds,
+                   "local_epochs": local_epochs, "batch_size": batch_size,
+                   "strategy": "averaging", "model": "mlp-4x64"},
+        "reference": {"wall_s": ref_wall,
+                      "rounds_per_sec": rounds / ref_wall},
+        "fused": {"wall_s": fus_wall, "rounds_per_sec": rounds / fus_wall},
+        "speedup": ref_wall / fus_wall,
+        "max_metric_delta": float(max(deltas)),
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+
+    return [{"name": f"fused_vs_reference/{eng}/N{clients}",
+             "us_per_call": result[eng]["wall_s"] / rounds * 1e6,
+             "derived": f"{result[eng]['rounds_per_sec']:.1f} rounds/s",
+             **result} for eng in ("reference", "fused")]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--local-epochs", type=int, default=1)
+    ap.add_argument("--out", default="BENCH_fused.json")
+    args = ap.parse_args()
+    rows = run(rounds=args.rounds, clients=args.clients,
+               local_epochs=args.local_epochs, out=args.out)
+    r = rows[0]
+    print(f"reference: {r['reference']['rounds_per_sec']:.1f} rounds/s")
+    print(f"fused    : {r['fused']['rounds_per_sec']:.1f} rounds/s")
+    print(f"speedup  : {r['speedup']:.1f}x   "
+          f"(max metric delta {r['max_metric_delta']:.2e})  -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -61,6 +61,13 @@ def main() -> None:
         rows = fig2_threshold.run(**fig2_kw)
         all_rows += rows
         _emit(rows, csv_rows)
+    if want("fused"):
+        from benchmarks import fused_vs_reference
+        rows = fused_vs_reference.run(
+            out=os.path.join(args.artifacts, "BENCH_fused.json"),
+            **(dict(rounds=8) if args.quick else dict()))
+        all_rows += rows
+        _emit(rows, csv_rows)
     if want("kernels"):
         from benchmarks import kernels_bench
         rows = kernels_bench.run()

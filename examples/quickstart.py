@@ -4,13 +4,18 @@ Three heterogeneous clients (cut layers 1/2/3 of a 4-layer net) train one
 shared model collaboratively with the Averaging strategy (paper Alg. 2),
 then serve with the entropy-gated early exit (Alg. 3).
 
+Training uses ``FusedHeteroTrainer``, the scan+vmap engine that runs the
+whole training run as one compiled program (see docs/ENGINES.md); swap in
+``repro.core.strategies.HeteroTrainer`` for the paper-faithful round-by-round
+reference — both produce the same numbers.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
 from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
+from repro.core.fused import FusedHeteroTrainer
 from repro.core.splitee import MLPSplitModel
-from repro.core.strategies import HeteroTrainer
 from repro.data.pipeline import ClientPartitioner
 
 
@@ -27,7 +32,7 @@ def main():
     profile = HeteroProfile(split_layers=(1, 2, 3))   # heterogeneous cuts
     clients = ClientPartitioner(3, seed=0).split(*train)
 
-    trainer = HeteroTrainer(
+    trainer = FusedHeteroTrainer(
         model,
         SplitEEConfig(profile=profile, strategy="averaging"),
         OptimizerConfig(lr=3e-3, total_steps=60),

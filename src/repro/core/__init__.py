@@ -3,5 +3,6 @@
 #   losses.py       — CE / entropy / confidence
 #   aggregation.py  — Eq. (1) cross-layer aggregation
 #   strategies.py   — Alg. 1 (Sequential) and Alg. 2 (Averaging), paper-faithful
+#   fused.py        — scan+vmap multi-round engine (docs/ENGINES.md)
 #   spmd.py         — fused SPMD production train step (masked exits + routing)
 #   inference.py    — Alg. 3 entropy-gated adaptive inference

@@ -6,12 +6,17 @@ averages its parameters; the mean is broadcast back to every member.  Models
 are dicts keyed by layer name (``layer4``, ``head``, ...) so "common layers"
 are identified by key across heterogeneous server models.
 
-Two implementations:
+Three implementations:
   * ``cross_layer_aggregate``      — literal per-client loop (the reference,
     used by the paper-faithful Averaging strategy and by the test oracle).
   * ``masked_mean_over_axis``      — the SPMD collective form: a weighted
     ``psum`` over a mesh axis with per-layer participation masks, used by the
     production fused step (see core/spmd.py and DESIGN.md §2).
+  * ``stacked_cross_layer_aggregate`` — the in-graph form over
+    cohort-stacked server models, traceable inside ``lax.scan``; the fused
+    engine (core/fused.py) applies it under a ``lax.cond`` on the traced
+    ``aggregate_every`` boundary predicate so aggregation never forces a
+    host sync.
 """
 from __future__ import annotations
 
@@ -52,6 +57,42 @@ def cross_layer_aggregate(server_models: Sequence[Dict[str, Any]],
         mean = _mean_trees([server_models[i][key] for i in members])
         for i in members:
             out[i][key] = mean
+    return out
+
+
+def stacked_cross_layer_aggregate(stacked: Dict[int, Dict[str, Any]],
+                                  counts: Dict[int, int]
+                                  ) -> Dict[int, Dict[str, Any]]:
+    """Eq. (1) over cohort-stacked server models, inside the compiled graph.
+
+    ``stacked[li]`` is the server model of the cohort with split layer ``li``,
+    keyed by layer name, every leaf carrying a leading lane axis of size
+    ``counts[li]`` (one lane per client).  For each layer key the mean is
+    taken over *all* lanes of *all* cohorts containing that key — the same
+    participation set C_l as :func:`cross_layer_aggregate` — and broadcast
+    back to every member lane.  Keys held by a single client pass through
+    unchanged.  Callers gate ``aggregate_every`` boundaries around this
+    (e.g. ``lax.cond`` in core/fused.py) so no host round-trip is needed.
+    """
+    out = {li: dict(m) for li, m in stacked.items()}
+    all_keys = set()
+    for m in stacked.values():
+        all_keys |= set(m.keys())
+
+    for key in sorted(all_keys):
+        members = [li for li, m in stacked.items() if key in m]
+        total = sum(counts[li] for li in members)
+        if total <= 1:
+            continue
+        # lane-sum within each member cohort, then mean across cohorts
+        sums = [jax.tree.map(lambda x: jnp.sum(x.astype(jnp.float32), axis=0),
+                             stacked[li][key]) for li in members]
+        mean = jax.tree.map(lambda *xs: sum(xs) / float(total), *sums)
+        for li in members:
+            out[li][key] = jax.tree.map(
+                lambda old, m_: jnp.broadcast_to(
+                    m_.astype(old.dtype)[None], old.shape),
+                stacked[li][key], mean)
     return out
 
 

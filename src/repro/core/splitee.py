@@ -18,7 +18,7 @@ are keyed ``layer{l}``/``head`` so Eq. (1) aggregation matches layers by name.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,12 +29,41 @@ from repro.models.common import fan_in_init, zeros
 
 
 # ---------------------------------------------------------------------------
+# Cohort stacking — shared by the fused engine (core/fused.py)
+# ---------------------------------------------------------------------------
+
+
+def stack_pytrees(trees: Sequence[Any]) -> Any:
+    """Stack same-structure pytrees along a new leading "lane" axis.  Clients
+    that share a split layer have identical tree structure, so a cohort of k
+    clients becomes one pytree with [k, ...] leaves, ready for ``jax.vmap``."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def unstack_pytrees(stacked: Any, n: int) -> list:
+    """Inverse of :func:`stack_pytrees`: split the leading lane axis back into
+    ``n`` per-client pytrees (device-resident slices, no host copy)."""
+    return [jax.tree.map(lambda x: x[i], stacked) for i in range(n)]
+
+
+class _StackMixin:
+    """Adapter-level cohort helpers: every split model can stack a cohort of
+    same-shaped per-client pytrees for vmap and unstack them afterwards."""
+
+    def stack_clients(self, trees: Sequence[Any]) -> Any:
+        return stack_pytrees(trees)
+
+    def unstack(self, stacked: Any, n: int) -> list:
+        return unstack_pytrees(stacked, n)
+
+
+# ---------------------------------------------------------------------------
 # ResNet adapter (the paper's experimental model)
 # ---------------------------------------------------------------------------
 
 
 @dataclass
-class ResNetSplitModel:
+class ResNetSplitModel(_StackMixin):
     cfg: rn.ResNetConfig
     seed: int = 0
 
@@ -86,7 +115,7 @@ class ResNetSplitModel:
 
 
 @dataclass
-class MLPSplitModel:
+class MLPSplitModel(_StackMixin):
     """L-layer MLP on flat inputs; layer l is keyed ``layer{l}`` so the same
     strategy/aggregation machinery applies.  Used by tests and quick demos."""
 

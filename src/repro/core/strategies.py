@@ -42,6 +42,52 @@ class RoundMetrics:
     server_loss: float
 
 
+# ---------------------------------------------------------------------------
+# Shared step-builders: pure functions of (pytrees, batch, lr), closed over the
+# model/optimizer config only.  ``HeteroTrainer`` jits them one client at a
+# time (the paper-faithful oracle); ``FusedHeteroTrainer`` (core/fused.py)
+# vmaps the same functions over stacked client cohorts, so both engines run
+# numerically identical math.
+# ---------------------------------------------------------------------------
+
+
+def make_client_step(model, opt_cfg: OptimizerConfig) -> Callable:
+    """(trainable, state, opt, x, y, lr) ->
+    (trainable, state, opt, h, loss) — Alg. 1/2 lines 6-11."""
+
+    def loss_fn(trainable, state, x, y):
+        h, logits, new_state = model.client_forward(trainable, state, x,
+                                                    train=True)
+        return softmax_cross_entropy(logits, y), (h, new_state)
+
+    def step(trainable, state, opt, x, y, lr):
+        (loss, (h, new_state)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(trainable, state, x, y)
+        trainable, opt = adam_update(trainable, grads, opt, opt_cfg, lr)
+        return trainable, new_state, opt, h, loss
+
+    return step
+
+
+def make_server_step(model, opt_cfg: OptimizerConfig, li: int) -> Callable:
+    """(trainable, state, opt, h, y, lr) ->
+    (trainable, state, opt, loss) — Alg. 1/2 lines 12-16; ``h`` enters as
+    data, so no gradient ever flows back to the client."""
+
+    def loss_fn(trainable, state, h, y):
+        logits, new_state = model.server_forward(trainable, state, h, li,
+                                                 train=True)
+        return softmax_cross_entropy(logits, y), new_state
+
+    def step(trainable, state, opt, h, y, lr):
+        (loss, new_state), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(trainable, state, h, y)
+        trainable, opt = adam_update(trainable, grads, opt, opt_cfg, lr)
+        return trainable, new_state, opt, loss
+
+    return step
+
+
 class HeteroTrainer:
     """Drives one of the cooperative strategies over N heterogeneous clients."""
 
@@ -88,43 +134,17 @@ class HeteroTrainer:
 
     # ------------------------------------------------------------------ jit
     def _client_step(self, li: int) -> Callable:
-        if li not in self._cstep:
-            model = self.model
-
-            def loss_fn(trainable, state, x, y):
-                h, logits, new_state = model.client_forward(trainable, state,
-                                                            x, train=True)
-                return softmax_cross_entropy(logits, y), (h, new_state)
-
-            @jax.jit
-            def step(trainable, state, opt, x, y, lr):
-                (loss, (h, new_state)), grads = jax.value_and_grad(
-                    loss_fn, has_aux=True)(trainable, state, x, y)
-                trainable, opt = adam_update(trainable, grads, opt,
-                                             self.opt_cfg, lr)
-                return trainable, new_state, opt, h, loss
-
-            self._cstep[li] = step
-        return self._cstep[li]
+        # the client step is li-independent (the trainable's own layer keys
+        # determine depth), so one jitted step serves every cohort
+        if 0 not in self._cstep:
+            self._cstep[0] = jax.jit(make_client_step(self.model,
+                                                      self.opt_cfg))
+        return self._cstep[0]
 
     def _server_step(self, li: int) -> Callable:
         if li not in self._sstep:
-            model = self.model
-
-            def loss_fn(trainable, state, h, y):
-                logits, new_state = model.server_forward(trainable, state, h,
-                                                         li, train=True)
-                return softmax_cross_entropy(logits, y), new_state
-
-            @jax.jit
-            def step(trainable, state, opt, h, y, lr):
-                (loss, new_state), grads = jax.value_and_grad(
-                    loss_fn, has_aux=True)(trainable, state, h, y)
-                trainable, opt = adam_update(trainable, grads, opt,
-                                             self.opt_cfg, lr)
-                return trainable, new_state, opt, loss
-
-            self._sstep[li] = step
+            self._sstep[li] = jax.jit(make_server_step(self.model,
+                                                       self.opt_cfg, li))
         return self._sstep[li]
 
     # ------------------------------------------------------------ training

@@ -27,12 +27,20 @@ class ClientPartitioner:
         return [(x[s], y[s]) for s in shards]
 
 
+def effective_batch_size(n: int, batch_size: int) -> int:
+    """The batch size :func:`batch_iterator` actually emits for a shard of
+    ``n`` samples: tiny client shards fall back to full-shard batches.  The
+    single source of truth for every consumer (the fused engine validates
+    cohort stackability against this)."""
+    return min(batch_size, n)
+
+
 def batch_iterator(x: np.ndarray, y: np.ndarray, batch_size: int, *,
                    seed: int = 0, augment=None, epochs: int = 1_000_000
                    ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
     rng = np.random.default_rng(seed)
     n = len(x)
-    bs = min(batch_size, n)         # tiny client shards: full-shard batches
+    bs = effective_batch_size(n, batch_size)
     for _ in range(epochs):
         perm = rng.permutation(n)
         for i in range(0, n - bs + 1, bs):
@@ -41,6 +49,26 @@ def batch_iterator(x: np.ndarray, y: np.ndarray, batch_size: int, *,
             if augment is not None:
                 bx = augment(rng, bx)
             yield bx, y[idx]
+
+
+def prestage_batches(it: Iterator[Tuple[np.ndarray, np.ndarray]],
+                     rounds: int, local_epochs: int
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Draw ``rounds * local_epochs`` consecutive batches from a
+    :func:`batch_iterator` and stack them as ``[rounds, local_epochs, B, ...]``
+    host tensors, ready to be device-put once and scanned over.  Consuming the
+    *same* iterator the reference engine would consume keeps the minibatch
+    sequence bit-identical between engines (the equivalence contract in
+    docs/ENGINES.md)."""
+    xs, ys = [], []
+    for _ in range(rounds * local_epochs):
+        x, y = next(it)
+        xs.append(x)
+        ys.append(y)
+    x0, y0 = xs[0], ys[0]
+    bx = np.stack(xs).reshape(rounds, local_epochs, *x0.shape)
+    by = np.stack(ys).reshape(rounds, local_epochs, *y0.shape)
+    return bx, by
 
 
 def global_hetero_batch(client_batches: Sequence[Tuple[np.ndarray, np.ndarray]],

@@ -1,0 +1,33 @@
+"""Smoke-test the fused benchmark end-to-end at CI size: two tiny rounds per
+engine, then validate the emitted ``BENCH_fused.json`` schema so the
+benchmark can't silently rot."""
+import json
+import os
+
+import pytest
+
+from benchmarks import fused_vs_reference
+
+
+def test_fused_benchmark_emits_valid_json(tmp_path):
+    out = os.path.join(tmp_path, "BENCH_fused.json")
+    rows = fused_vs_reference.run(rounds=2, clients=4, batch_size=32, out=out)
+
+    # rows consumable by benchmarks/run.py's CSV emitter
+    assert len(rows) == 2
+    for r in rows:
+        assert set(("name", "us_per_call", "derived")) <= set(r)
+
+    with open(out) as f:
+        data = json.load(f)
+    assert set(fused_vs_reference.SCHEMA_KEYS) <= set(data)
+    assert data["benchmark"] == "fused_vs_reference"
+    assert data["config"]["clients"] == 4
+    assert len(data["config"]["splits"]) == 4
+    for eng in ("reference", "fused"):
+        assert data[eng]["wall_s"] > 0
+        assert data[eng]["rounds_per_sec"] > 0
+    assert data["speedup"] == pytest.approx(
+        data["reference"]["wall_s"] / data["fused"]["wall_s"])
+    # engines trained on identical minibatches: metrics must agree
+    assert data["max_metric_delta"] < 1e-4

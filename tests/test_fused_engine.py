@@ -1,0 +1,162 @@
+"""Equivalence contract between the fused (scan+vmap) engine and the
+paper-faithful reference engine, plus adaptive-inference threshold edges
+shared by both engines.  See docs/ENGINES.md."""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
+from repro.core.fused import FusedHeteroTrainer
+from repro.core.splitee import MLPSplitModel, stack_pytrees, unstack_pytrees
+from repro.core.strategies import HeteroTrainer
+
+TOL = 1e-5
+
+
+def _blob_data(n, d, classes, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(classes, d)) * 2.0
+    y = rng.integers(0, classes, n).astype(np.int32)
+    x = (centers[y] + rng.normal(size=(n, d))).astype(np.float32)
+    return x, y
+
+
+def _make(cls, strategy, splits=(1, 2, 2, 3), aggregate_every=1):
+    x, y = _blob_data(600, 16, 3)
+    n = len(splits)
+    model = MLPSplitModel(in_dim=16, hidden=32, num_classes=3, num_layers=4,
+                          seed=0)
+    parts = [(x[i::n], y[i::n]) for i in range(n)]
+    tr = cls(model,
+             SplitEEConfig(profile=HeteroProfile(tuple(splits)),
+                           strategy=strategy,
+                           aggregate_every=aggregate_every),
+             OptimizerConfig(lr=3e-3, total_steps=50),
+             parts, batch_size=64)
+    return tr, (x, y)
+
+
+def _assert_trees_close(a, b, msg=""):
+    jax.tree.map(lambda u, v: np.testing.assert_allclose(
+        np.asarray(u), np.asarray(v), atol=TOL, err_msg=msg), a, b)
+
+
+def _assert_engines_match(ref, fus):
+    assert len(ref.history) == len(fus.history)
+    for a, b in zip(ref.history, fus.history):
+        assert a.round == b.round
+        assert abs(a.client_loss - b.client_loss) < TOL
+        assert abs(a.server_loss - b.server_loss) < TOL
+    for i in range(ref.N):
+        _assert_trees_close(ref.clients[i]["trainable"],
+                            fus.clients[i]["trainable"], f"client {i}")
+        _assert_trees_close(ref.servers[i]["trainable"],
+                            fus.servers[i]["trainable"], f"server {i}")
+        _assert_trees_close((ref.client_opts[i].m, ref.client_opts[i].v),
+                            (fus.client_opts[i].m, fus.client_opts[i].v),
+                            f"client opt {i}")
+
+
+# ---------------------------------------------------------------------------
+# numerical equivalence to the reference engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["averaging", "distributed"])
+def test_fused_matches_reference(strategy):
+    """≥3 rounds with E=2 local epochs: params, opt state and per-round
+    metrics agree with the per-client reference to ~1e-5."""
+    ref, _ = _make(HeteroTrainer, strategy)
+    fus, _ = _make(FusedHeteroTrainer, strategy)
+    ref.run(4, local_epochs=2)
+    fus.run(4, local_epochs=2)
+    _assert_engines_match(ref, fus)
+
+
+def test_fused_matches_reference_aggregate_every_2():
+    """aggregate_every=2: rounds 0/2 skip Eq. (1), rounds 1/3 apply it — the
+    in-graph masked aggregation must hit exactly the reference boundaries."""
+    ref, _ = _make(HeteroTrainer, "averaging", aggregate_every=2)
+    fus, _ = _make(FusedHeteroTrainer, "averaging", aggregate_every=2)
+    ref.run(4)
+    fus.run(4)
+    _assert_engines_match(ref, fus)
+    # boundary really aggregated: deepest common layers identical
+    for key in ("layer4", "head"):
+        w0 = np.asarray(fus.servers[0]["trainable"][key]["w"])
+        for s in fus.servers[1:]:
+            np.testing.assert_allclose(w0, np.asarray(s["trainable"][key]["w"]),
+                                       atol=1e-6)
+
+
+def test_fused_chunked_matches_single_chunk():
+    """Chunking the scan (chunk_rounds) must not change the trajectory."""
+    one, _ = _make(FusedHeteroTrainer, "averaging", aggregate_every=2)
+    many, _ = _make(FusedHeteroTrainer, "averaging", aggregate_every=2)
+    one.run(6)
+    many.run(6, chunk_rounds=2)
+    _assert_engines_match(one, many)
+
+
+def test_fused_rejects_sequential():
+    with pytest.raises(ValueError, match="[Ss]equential"):
+        _make(FusedHeteroTrainer, "sequential")
+
+
+def test_fused_rejects_ragged_cohort_batches():
+    """Two clients share a cut layer but batch_iterator clamps one shard
+    below batch_size — lanes can't stack, so construction must fail loudly
+    (the reference engine still handles this profile)."""
+    x, y = _blob_data(200, 16, 3)
+    model = MLPSplitModel(in_dim=16, hidden=32, num_classes=3, num_layers=4)
+    parts = [(x[:100], y[:100]), (x[100:140], y[100:140])]   # 100 vs 40
+    cfg = SplitEEConfig(profile=HeteroProfile((2, 2)), strategy="averaging")
+    with pytest.raises(ValueError, match="batch"):
+        FusedHeteroTrainer(model, cfg, OptimizerConfig(), parts,
+                           batch_size=64)
+    HeteroTrainer(model, cfg, OptimizerConfig(), parts,
+                  batch_size=64).run(1)                      # oracle is fine
+
+
+def test_stack_unstack_roundtrip():
+    model = MLPSplitModel(in_dim=8, hidden=16, num_classes=3, num_layers=4)
+    clients = [model.make_client(2) for _ in range(3)]
+    stacked = model.stack_clients(clients)
+    w = stacked["trainable"]["layers"]["layer1"]["w"]
+    assert w.shape[0] == 3
+    back = model.unstack(stacked, 3)
+    for a, b in zip(clients, back):
+        _assert_trees_close(a, b)
+    # module-level helpers agree with the adapter methods
+    _assert_trees_close(stack_pytrees(clients), stacked)
+    for a, b in zip(unstack_pytrees(stacked, 3), back):
+        _assert_trees_close(a, b)
+
+
+# ---------------------------------------------------------------------------
+# evaluate_adaptive threshold edges (both engines share the implementation)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cls", [HeteroTrainer, FusedHeteroTrainer])
+def test_adaptive_tau_zero_is_pure_server(cls):
+    """tau=0: entropy H >= 0 is never < 0, so nothing exits at the client —
+    accuracy must equal the server-side path."""
+    tr, (x, y) = _make(cls, "averaging")
+    tr.run(3)
+    ad = tr.evaluate_adaptive(x[:300], y[:300], tau=0.0, batch_size=100)
+    assert ad["client_ratio"] == [0.0] * tr.N
+    ev = tr.evaluate(x[:300], y[:300], batch_size=100)
+    np.testing.assert_allclose(ad["acc"], ev["server_acc"], atol=1e-6)
+
+
+@pytest.mark.parametrize("cls", [HeteroTrainer, FusedHeteroTrainer])
+def test_adaptive_tau_above_max_entropy_is_pure_client(cls):
+    """tau > log(num_classes) >= max H: every sample exits at the client."""
+    tr, (x, y) = _make(cls, "averaging")
+    tr.run(3)
+    tau = float(np.log(3)) + 0.1
+    ad = tr.evaluate_adaptive(x[:300], y[:300], tau=tau, batch_size=100)
+    assert ad["client_ratio"] == [1.0] * tr.N
+    ev = tr.evaluate(x[:300], y[:300], batch_size=100)
+    np.testing.assert_allclose(ad["acc"], ev["client_acc"], atol=1e-6)
