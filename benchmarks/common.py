@@ -14,10 +14,10 @@ from typing import Dict, List, Sequence
 
 import numpy as np
 
+from repro.api import TrainSession
 from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
 from repro.configs import resnet18_cifar
 from repro.core.splitee import ResNetSplitModel
-from repro.core.strategies import HeteroTrainer
 from repro.data.pipeline import ClientPartitioner
 from repro.data.synthetic import SyntheticImageDataset
 
@@ -50,8 +50,18 @@ def make_dataset(name: str, train_size: int, test_size: int, seed: int = 0
 def run_strategy(dataset: SyntheticImageDataset, strategy: str,
                  splits: Sequence[int], *, rounds: int, local_epochs: int = 1,
                  batch_size: int = 64, width_mult: float = 0.125,
-                 lr: float = 3e-3, seed: int = 0) -> Dict:
-    """Train one (strategy, split-profile) cell and evaluate per split depth."""
+                 lr: float = 3e-3, seed: int = 0, engine: str = "auto"
+                 ) -> Dict:
+    """Train one (strategy, split-profile) cell and evaluate per split depth.
+
+    ``engine`` is a registered engine name or ``"auto"`` (the default):
+    the fused scan+vmap engine where it applies, the paper-faithful
+    reference engine for ordered strategies.  Sequential/centralized
+    cells degrade an explicit ``engine="fused"`` to ``"auto"`` (fused
+    cannot run ordered strategies), so one engine choice can drive a
+    whole table."""
+    if strategy in ("sequential", "centralized") and engine == "fused":
+        engine = "auto"
     cfg = resnet18_cifar.config("cifar10", width_mult=width_mult)
     cfg = dataclasses.replace(cfg, num_classes=dataset.num_classes)
     model = ResNetSplitModel(cfg, seed=seed)
@@ -63,28 +73,28 @@ def run_strategy(dataset: SyntheticImageDataset, strategy: str,
                    "split_layers": sorted(set(splits))}
         for li in sorted(set(splits)):
             steps = rounds * max(1, len(splits))    # same global step budget
-            tr = HeteroTrainer(
+            sess = TrainSession.from_config(
                 model, SplitEEConfig(profile=HeteroProfile((li,)),
                                      strategy="sequential"),
                 OptimizerConfig(lr=lr, total_steps=steps),
-                [(x, y)], batch_size=batch_size,
+                [(x, y)], batch_size=batch_size, engine=engine,
                 augment=SyntheticImageDataset.augment, seed=seed)
-            tr.run(steps, local_epochs)
-            ev = tr.evaluate(*dataset.test, batch_size=256)
+            sess.train(steps, local_epochs)
+            ev = sess.evaluate(*dataset.test, batch_size=256)
             results["client_acc"].append(ev["client_acc"][0])
             results["server_acc"].append(ev["server_acc"][0])
         return results
 
     parts = ClientPartitioner(len(splits), seed=seed).split(x, y)
-    tr = HeteroTrainer(model,
-                       SplitEEConfig(profile=HeteroProfile(tuple(splits)),
-                                     strategy=strategy),
-                       OptimizerConfig(lr=lr, total_steps=rounds),
-                       parts, batch_size=batch_size,
-                       augment=SyntheticImageDataset.augment, seed=seed)
-    tr.run(rounds, local_epochs)
-    ev = tr.evaluate(*dataset.test, batch_size=256)
-    ev["trainer"] = tr
+    sess = TrainSession.from_config(
+        model, SplitEEConfig(profile=HeteroProfile(tuple(splits)),
+                             strategy=strategy),
+        OptimizerConfig(lr=lr, total_steps=rounds),
+        parts, batch_size=batch_size, engine=engine,
+        augment=SyntheticImageDataset.augment, seed=seed)
+    sess.train(rounds, local_epochs)
+    ev = sess.evaluate(*dataset.test, batch_size=256)
+    ev["session"] = ev["trainer"] = sess    # "trainer" kept for old readers
     return ev
 
 

@@ -29,11 +29,13 @@ def run(rounds: int = 40, train_size: int = 1200, test_size: int = 384,
     for layer in layers:
         splits = (layer,) * n_clients
         ev = run_strategy(ds, "sequential", splits, rounds=rounds, seed=seed)
-        tr = ev["trainer"]
+        sess = ev["session"]
         for tau in taus:
             t0 = time.time()
-            ad = tr.evaluate_adaptive(*ds.test, tau=float(tau),
-                                      batch_size=256)
+            # tau is a traced scalar in the jitted evaluator: the whole
+            # sweep reuses one compilation per split depth
+            ad = sess.evaluate_adaptive(*ds.test, tau=float(tau),
+                                        batch_size=256)
             rows.append({
                 "table": "fig2_threshold", "dataset": dataset,
                 "layer": layer, "tau_entropy": round(float(tau), 3),

@@ -1,11 +1,12 @@
 """Fused vs. reference engine throughput (rounds/sec) on the Averaging
 strategy — the headline metric for the scan+vmap engine (docs/ENGINES.md).
 
-Both engines train the same N-client MLP split workload on identical data;
-the reference engine pays two jit dispatches plus a ``float(loss)`` host sync
-per client per minibatch, the fused engine runs the whole chunk as one
-compiled scan.  Emits ``BENCH_fused.json`` with the schema validated by
-``tests/test_bench_smoke.py``.
+Both engines run behind ``repro.api.TrainSession`` (``engine="reference"``
+vs ``engine="fused"``) on the same N-client MLP split workload and
+identical data; the reference engine pays two jit dispatches plus a
+``float(loss)`` host sync per client per minibatch, the fused engine runs
+the whole chunk as one compiled scan.  Emits ``BENCH_fused.json`` with the
+schema validated by ``tests/test_bench_smoke.py``.
 
   PYTHONPATH=src python -m benchmarks.fused_vs_reference
   PYTHONPATH=src python -m benchmarks.fused_vs_reference --rounds 200
@@ -19,25 +20,25 @@ from typing import Dict, List, Sequence
 
 import numpy as np
 
+from repro.api import TrainSession
 from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
-from repro.core.fused import FusedHeteroTrainer
 from repro.core.splitee import MLPSplitModel
-from repro.core.strategies import HeteroTrainer
 from repro.data.pipeline import ClientPartitioner
 
 SCHEMA_KEYS = ("benchmark", "config", "reference", "fused", "speedup",
                "max_metric_delta")
 
 
-def _make_trainer(cls, splits: Sequence[int], parts, *, batch_size: int,
-                  total_steps: int):
+def _make_session(engine: str, splits: Sequence[int], parts, *,
+                  batch_size: int, total_steps: int) -> TrainSession:
     model = MLPSplitModel(in_dim=32, hidden=64, num_classes=5, num_layers=4,
                           seed=0)
-    return cls(model,
-               SplitEEConfig(profile=HeteroProfile(tuple(splits)),
-                             strategy="averaging"),
-               OptimizerConfig(lr=3e-3, total_steps=total_steps),
-               parts, batch_size=batch_size)
+    return TrainSession.from_config(
+        model,
+        SplitEEConfig(profile=HeteroProfile(tuple(splits)),
+                      strategy="averaging"),
+        OptimizerConfig(lr=3e-3, total_steps=total_steps),
+        parts, batch_size=batch_size, engine=engine)
 
 
 def run(rounds: int = 60, clients: int = 4, batch_size: int = 64,
@@ -56,17 +57,17 @@ def run(rounds: int = 60, clients: int = 4, batch_size: int = 64,
     parts = ClientPartitioner(clients, seed=0).split(x, y)
     total_steps = 4 * rounds * local_epochs + 16
 
-    def time_engine(cls, **run_kw):
-        tr = _make_trainer(cls, splits, parts, batch_size=batch_size,
-                           total_steps=total_steps)
-        tr.run(rounds, local_epochs, **run_kw)             # warmup + compile
+    def time_engine(engine, **run_kw):
+        sess = _make_session(engine, splits, parts, batch_size=batch_size,
+                             total_steps=total_steps)
+        sess.train(rounds, local_epochs, **run_kw)         # warmup + compile
         t0 = time.perf_counter()
-        tr.run(rounds, local_epochs, **run_kw)
+        sess.train(rounds, local_epochs, **run_kw)
         wall = time.perf_counter() - t0
-        return tr, wall
+        return sess, wall
 
-    ref_tr, ref_wall = time_engine(HeteroTrainer)
-    fus_tr, fus_wall = time_engine(FusedHeteroTrainer, chunk_rounds=rounds)
+    ref_tr, ref_wall = time_engine("reference")
+    fus_tr, fus_wall = time_engine("fused", chunk_rounds=rounds)
 
     # engines consumed identical data: timed-window metrics must agree
     deltas = [max(abs(a.client_loss - b.client_loss),

@@ -14,7 +14,9 @@ METHODS = ("sequential", "averaging", "centralized", "distributed")
 
 def run(rounds: int = 40, train_size: int = 1200, test_size: int = 384,
         datasets=("syn10", "syn100"), layers=(3, 4, 5), n_clients: int = 6,
-        seed: int = 0) -> List[dict]:
+        seed: int = 0, engine: str = "auto") -> List[dict]:
+    """``engine`` selects the TrainSession execution backend per cell
+    ("auto" = fused where valid, reference for sequential/centralized)."""
     rows = []
     for ds_name in datasets:
         ds = make_dataset(ds_name, train_size, test_size, seed=seed)
@@ -25,7 +27,7 @@ def run(rounds: int = 40, train_size: int = 1200, test_size: int = 384,
                 ev = run_strategy(ds, method,
                                   splits if method != "centralized"
                                   else (layer,) * n_clients,
-                                  rounds=rounds, seed=seed)
+                                  rounds=rounds, seed=seed, engine=engine)
                 if method == "centralized":
                     client, server = ev["client_acc"][0], ev["server_acc"][0]
                 else:

@@ -13,13 +13,17 @@ METHODS = ("sequential", "averaging", "centralized", "distributed")
 
 
 def run(rounds: int = 25, train_size: int = 1800, test_size: int = 384,
-        datasets=("syn10", "syn100"), seed: int = 0) -> List[dict]:
+        datasets=("syn10", "syn100"), seed: int = 0, engine: str = "auto"
+        ) -> List[dict]:
+    """``engine`` selects the TrainSession execution backend per cell
+    ("auto" = fused where valid, reference for sequential/centralized)."""
     rows = []
     for ds_name in datasets:
         ds = make_dataset(ds_name, train_size, test_size, seed=seed)
         for method in METHODS:
             t0 = time.time()
-            ev = run_strategy(ds, method, SPLITS, rounds=rounds, seed=seed)
+            ev = run_strategy(ds, method, SPLITS, rounds=rounds, seed=seed,
+                              engine=engine)
             if method == "centralized":
                 for li, c, s in zip(ev["split_layers"], ev["client_acc"],
                                     ev["server_acc"]):

@@ -7,10 +7,10 @@ communication saving the paper trades via the threshold tau.
 """
 import numpy as np
 
+from repro.api import TrainSession
 from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
 from repro.core.inference import AdaptiveInferenceEngine
 from repro.core.splitee import MLPSplitModel
-from repro.core.strategies import HeteroTrainer
 from repro.data.pipeline import ClientPartitioner
 
 
@@ -25,17 +25,17 @@ def main():
     model = MLPSplitModel(in_dim=d, hidden=64, num_classes=classes,
                           num_layers=4, seed=0)
     profile = HeteroProfile(split_layers=(2, 2, 2))
-    trainer = HeteroTrainer(model, SplitEEConfig(profile=profile,
-                                                 strategy="averaging"),
-                            OptimizerConfig(lr=3e-3, total_steps=50),
-                            ClientPartitioner(3, seed=0).split(*train),
-                            batch_size=64)
-    trainer.run(rounds=40)
+    session = TrainSession.from_config(
+        model, SplitEEConfig(profile=profile, strategy="averaging"),
+        OptimizerConfig(lr=3e-3, total_steps=50),
+        ClientPartitioner(3, seed=0).split(*train), batch_size=64)
+    session.train(rounds=40)
 
-    # wire client 0 + its server replica into the request router
+    # wire client 0 + its server replica into the request router: the
+    # TrainState pytree is the single source of every trained tensor
     li = profile.split_layers[0]
-    client = trainer.clients[0]
-    server = trainer.servers[0]
+    client = session.state.clients[0]
+    server = session.state.servers[0]
 
     def client_fn(xb):
         h, logits, _ = model.client_forward(client["trainable"],

@@ -83,7 +83,9 @@ def main():
 
     print(f"\nloss: first={losses[0]:.4f}  last={np.mean(losses[-10:]):.4f}")
     if args.checkpoint:
-        save_pytree(args.checkpoint, {"params": params},
+        # opt state + step counter ride along (same layout launch/train.py
+        # restores with --resume)
+        save_pytree(args.checkpoint, {"params": params, "opt": opt},
                     metadata={"steps": args.steps,
                               "final_loss": float(np.mean(losses[-10:]))})
         print(f"checkpoint -> {args.checkpoint}.npz")

@@ -26,13 +26,18 @@ def main():
     ap.add_argument("--train-size", type=int, default=1024)
     ap.add_argument("--dataset", default="syn100",
                     choices=["syn10", "syn100", "synstl"])
+    ap.add_argument("--engine", default="auto",
+                    help="TrainSession engine: auto | reference | fused "
+                         "(auto picks fused for averaging/distributed and "
+                         "falls back to reference for sequential)")
     args = ap.parse_args()
 
     ds = make_dataset(args.dataset, args.train_size, 512)
     print(f"dataset={args.dataset}  12 clients, splits {HETERO_SPLITS}\n")
     print(f"{'method':13s} {'depth':5s} {'client':>7s} {'server':>7s}")
     for method in ("sequential", "averaging", "distributed"):
-        ev = run_strategy(ds, method, HETERO_SPLITS, rounds=args.rounds)
+        ev = run_strategy(ds, method, HETERO_SPLITS, rounds=args.rounds,
+                          engine=args.engine)
         by = mean_by_depth(ev, HETERO_SPLITS)
         for li, accs in sorted(by.items()):
             print(f"{method:13s} L={li:3d} {accs['client']:7.3f} "

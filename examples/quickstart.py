@@ -4,22 +4,25 @@ Three heterogeneous clients (cut layers 1/2/3 of a 4-layer net) train one
 shared model collaboratively with the Averaging strategy (paper Alg. 2),
 then serve with the entropy-gated early exit (Alg. 3).
 
-Training uses ``FusedHeteroTrainer``, the scan+vmap engine that runs the
-whole training run as one compiled program (see docs/ENGINES.md); swap in
-``repro.core.strategies.HeteroTrainer`` for the paper-faithful round-by-round
-reference — both produce the same numbers.
+Training goes through ``repro.api.TrainSession`` — the one front door over
+the engine registry (docs/API.md).  ``engine="auto"`` picks the widest
+valid backend: the fused scan+vmap engine here (docs/ENGINES.md), the
+paper-faithful reference engine for e.g. the Sequential strategy.  Pass
+``engine="reference"`` to force the round-by-round oracle — both produce
+the same numbers.  ``session.save(path)`` / ``TrainSession.restore(path,
+model, clients)`` checkpoint and resume the full training state.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
+from repro.api import TrainSession
 from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
-from repro.core.fused import FusedHeteroTrainer
 from repro.core.splitee import MLPSplitModel
 from repro.data.pipeline import ClientPartitioner
 
 
-def main():
+def main(rounds: int = 40, engine: str = "auto", log_every: int = 10):
     rng = np.random.default_rng(0)
     n, d, classes = 3000, 32, 5
     centers = rng.normal(size=(classes, d)) * 1.5
@@ -32,23 +35,25 @@ def main():
     profile = HeteroProfile(split_layers=(1, 2, 3))   # heterogeneous cuts
     clients = ClientPartitioner(3, seed=0).split(*train)
 
-    trainer = FusedHeteroTrainer(
+    session = TrainSession.from_config(
         model,
         SplitEEConfig(profile=profile, strategy="averaging"),
         OptimizerConfig(lr=3e-3, total_steps=60),
-        clients, batch_size=64)
-    trainer.run(rounds=40, local_epochs=1, log_every=10)
+        clients, batch_size=64, engine=engine)
+    print(f"engine: {session.engine_name}")
+    session.train(rounds=rounds, local_epochs=1, log_every=log_every)
 
-    ev = trainer.evaluate(*test)
+    ev = session.evaluate(*test)
     print("\nper-client accuracy (cut layers 1/2/3):")
     print("  client-side exits:", [f"{a:.3f}" for a in ev["client_acc"]])
     print("  server-side      :", [f"{a:.3f}" for a in ev["server_acc"]])
 
     print("\nadaptive inference (exit iff entropy < tau):")
     for tau in (0.1, 0.5, 1.0):
-        ad = trainer.evaluate_adaptive(*test, tau=tau)
+        ad = session.evaluate_adaptive(*test, tau=tau)
         print(f"  tau={tau:.1f}  acc={np.mean(ad['acc']):.3f}  "
               f"client-ratio={np.mean(ad['client_ratio']):.2f}")
+    return session
 
 
 if __name__ == "__main__":

@@ -1,0 +1,21 @@
+"""Public training API for the Hetero-SplitEE reproduction.
+
+    from repro.api import TrainSession
+
+    session = TrainSession.from_config(model, splitee_cfg, opt_cfg,
+                                       client_data, batch_size=64)
+    session.train(rounds=100)
+    session.save("ckpt/run1")
+
+See docs/API.md.  The legacy ``HeteroTrainer``/``FusedHeteroTrainer``
+classes in ``repro.core`` are deprecation shims over this facade.
+"""
+from repro.api.engines import (AUTO_ORDER, Engine, SessionContext,  # noqa: F401
+                               available_engines, get_engine,
+                               register_engine, resolve_engine)
+from repro.api.evaluation import SplitEvaluator, pad_batches  # noqa: F401
+from repro.api.protocol import SplitModel, assert_split_model  # noqa: F401
+from repro.api.session import CHECKPOINT_FORMAT, TrainSession  # noqa: F401
+from repro.api.state import TrainState, init_train_state  # noqa: F401
+from repro.api.fused_engine import FusedEngine  # noqa: F401
+from repro.api.reference_engine import ReferenceEngine  # noqa: F401

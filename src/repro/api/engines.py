@@ -1,0 +1,229 @@
+"""Engine registry and the engine execution contract.
+
+An *engine* is an execution backend for the paper's cooperative strategies:
+a pure ``TrainState -> TrainState`` executor.  Engines never own training
+state — they receive a state, run some rounds, and return the new state plus
+per-round metrics, so states can be checkpointed, resumed, and handed
+between engines freely (the resume-equivalence contract in docs/API.md).
+
+Registered engines:
+
+  * ``"reference"`` — per-client jitted loop, the paper-faithful oracle;
+    supports every strategy including Sequential (Alg. 1).
+  * ``"fused"``     — scan+vmap whole-chunk execution for Averaging /
+    distributed (docs/ENGINES.md).
+  * ``"spmd"``      — reserved for the mesh-sharded cohort engine built on
+    core/spmd.py; not yet wired into ``TrainSession``.
+
+``resolve_engine("auto", ctx)`` picks the widest valid engine for the
+session's strategy and data layout (fused when it applies, else reference)
+instead of failing at runtime; naming an engine explicitly validates it at
+construction and raises with the precise reason if it cannot run.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type
+
+import numpy as np
+
+from repro.config import OptimizerConfig, SplitEEConfig
+from repro.data.pipeline import batch_iterator, effective_batch_size
+from repro.optim import make_schedule
+
+
+# ---------------------------------------------------------------------------
+# Session context: everything static an engine needs (model, configs, data).
+# Host-side and immutable apart from the iterator cache, which is keyed by
+# the state's ``batches_drawn`` cursor so engines stay pure w.r.t. state.
+# ---------------------------------------------------------------------------
+
+
+class DataCursor:
+    """Seeded per-client batch streams addressed by draw count.
+
+    ``align(cursor)`` positions every client's ``batch_iterator`` at the
+    given number of already-drawn batches — reusing the live iterators when
+    the cursor matches (the common run-after-run case) and otherwise
+    rebuilding from the seed and replaying, which reproduces the exact
+    upcoming batch (and augmentation RNG) sequence after a checkpoint
+    restore or a state rewind."""
+
+    def __init__(self, client_data: Sequence[Tuple[np.ndarray, np.ndarray]],
+                 batch_size: int, seed: int, augment=None):
+        self.client_data = client_data
+        self.batch_size = batch_size
+        self.seed = seed
+        self.augment = augment
+        self._iters: Optional[list] = None
+        self._pos: Optional[Tuple[int, ...]] = None
+
+    def align(self, cursor) -> None:
+        want = tuple(int(c) for c in np.asarray(cursor))
+        if self._pos == want:
+            return
+        self._iters = [
+            batch_iterator(x, y, self.batch_size, seed=self.seed + i,
+                           augment=self.augment)
+            for i, (x, y) in enumerate(self.client_data)]
+        for it, k in zip(self._iters, want):
+            for _ in range(k):
+                next(it)
+        self._pos = want
+
+    def draw(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        assert self._iters is not None, "align() before draw()"
+        batch = next(self._iters[i])
+        pos = list(self._pos)
+        pos[i] += 1
+        self._pos = tuple(pos)
+        return batch
+
+
+class SessionContext:
+    """Static bundle shared by a session and its engine: the model adapter,
+    configs, derived schedule/LR constants, and the data cursor."""
+
+    def __init__(self, model, splitee_cfg: SplitEEConfig,
+                 opt_cfg: OptimizerConfig,
+                 client_data: Sequence[Tuple[np.ndarray, np.ndarray]],
+                 batch_size: int, *, augment=None, seed: int = 0):
+        self.model = model
+        self.cfg = splitee_cfg
+        self.opt_cfg = opt_cfg
+        self.client_data = client_data
+        self.batch_size = batch_size
+        self.augment = augment
+        self.seed = seed
+
+        self.profile = splitee_cfg.profile
+        self.strategy = splitee_cfg.strategy
+        self.N = self.profile.num_groups
+        if len(client_data) != self.N:
+            raise ValueError(f"profile has {self.N} client groups but "
+                             f"{len(client_data)} data shards were given")
+        self.schedule = make_schedule(opt_cfg)
+        self.server_lr_div = splitee_cfg.resolved_server_lr_divisor()
+        self.data = DataCursor(client_data, batch_size, seed, augment)
+
+
+# ---------------------------------------------------------------------------
+# Engine base + registry
+# ---------------------------------------------------------------------------
+
+
+class Engine:
+    """Base class: a pure ``state -> state`` executor bound to a context.
+
+    Instances may cache compiled functions (jitted steps, scan chunks) —
+    caches are derived from the immutable context, never from state."""
+
+    name: str = "?"
+
+    def __init__(self, ctx: SessionContext):
+        reason = self.supports(ctx)
+        if reason:
+            raise ValueError(reason)
+        self.ctx = ctx
+
+    @classmethod
+    def supports(cls, ctx: SessionContext) -> Optional[str]:
+        """``None`` if this engine can run the session, else a human-readable
+        reason (used both for auto-selection and for construction errors)."""
+        return None
+
+    def run(self, state, rounds: int, local_epochs: int = 1,
+            log_every: int = 0, chunk_rounds: int = 0):
+        """Train ``rounds`` rounds from ``state``; returns
+        ``(new_state, [RoundMetrics])``.  Must not mutate ``state``."""
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, Type[Engine]] = {}
+
+#: auto-selection preference: widest engine first
+AUTO_ORDER = ("fused", "reference")
+
+
+def register_engine(name: str) -> Callable[[Type[Engine]], Type[Engine]]:
+    def deco(cls: Type[Engine]) -> Type[Engine]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get_engine(name: str) -> Type[Engine]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown engine {name!r}; registered engines: "
+                         f"{available_engines()}") from None
+
+
+def available_engines() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_engine(name: str, ctx: SessionContext) -> Type[Engine]:
+    """Resolve an engine name (or ``"auto"``) against a session context.
+
+    ``"auto"`` returns the first engine in :data:`AUTO_ORDER` whose
+    ``supports`` accepts the context — e.g. Sequential-strategy sessions
+    fall back to the reference engine instead of raising the way an explicit
+    ``engine="fused"`` request does."""
+    if name == "auto":
+        reasons = []
+        for cand in AUTO_ORDER:
+            cls = _REGISTRY[cand]
+            reason = cls.supports(ctx)
+            if reason is None:
+                return cls
+            reasons.append(f"{cand}: {reason}")
+        raise ValueError("no registered engine supports this session "
+                         f"({'; '.join(reasons)})")
+    cls = get_engine(name)
+    reason = cls.supports(ctx)
+    if reason:
+        raise ValueError(reason)
+    return cls
+
+
+@register_engine("spmd")
+class SpmdEngine(Engine):
+    """Reserved: mesh-sharded cohort execution (cohorts spread over the
+    ``data`` mesh axis via core/spmd.py).  Registered so the name is claimed
+    and discoverable; selecting it explains where the machinery lives."""
+
+    @classmethod
+    def supports(cls, ctx: SessionContext) -> Optional[str]:
+        return ("engine 'spmd' is reserved for the mesh-sharded cohort "
+                "engine (core/spmd.py, launch/train.py) and is not yet "
+                "wired into TrainSession — use 'fused' or 'reference'")
+
+
+def cohort_layout(split_layers: Sequence[int]
+                  ) -> Tuple[Tuple[int, ...], Dict[int, List[int]]]:
+    """Group client indices into cohorts by split layer: returns the sorted
+    distinct cut layers and ``{li: [client indices]}``."""
+    lis = tuple(sorted(set(split_layers)))
+    lanes = {li: [i for i, l in enumerate(split_layers) if l == li]
+             for li in lis}
+    return lis, lanes
+
+
+def ragged_cohort_reason(ctx: SessionContext) -> Optional[str]:
+    """Cohort lanes are stacked into one ``[k, B, ...]`` tensor, so clients
+    sharing a cut layer must emit equal effective batch sizes; return the
+    offending cohort's description if not (the reference engine has no such
+    constraint)."""
+    _, lanes = cohort_layout(ctx.profile.split_layers)
+    for li, members in lanes.items():
+        bs = {i: effective_batch_size(len(ctx.client_data[i][0]),
+                                      ctx.batch_size)
+              for i in members}
+        if len(set(bs.values())) > 1:
+            return (f"cohort l_i={li} mixes effective batch sizes {bs} "
+                    f"(batch_size={ctx.batch_size} clamped to shard "
+                    f"length); equalize client shards or use the "
+                    f"reference engine")
+    return None

@@ -1,0 +1,123 @@
+"""Jitted, batched evaluation over a ``TrainState``.
+
+Replaces the old per-batch ``float()`` host-sync loops in
+``HeteroTrainer.evaluate``/``evaluate_adaptive``: the test set is padded to
+whole batches with a validity mask (so the tail batch is *scored*, not
+dropped), per-batch sums accumulate inside one ``lax.scan`` per client, and
+the host sees a single 5-vector per client.
+
+The entropy threshold ``tau`` enters the compiled function as a traced
+scalar, so sweeping thresholds (benchmarks/fig2_threshold.py) reuses one
+compilation.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.state import TrainState
+from repro.config import HeteroProfile
+from repro.core.losses import softmax_entropy
+
+# accumulator layout of one scan over batches
+_CLIENT_OK, _SERVER_OK, _ADAPTIVE_OK, _EXITS, _ENT_SUM = range(5)
+
+
+def pad_batches(x: np.ndarray, y: np.ndarray, batch_size: int
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Reshape a test set into ``[nb, B, ...]`` whole batches plus a 0/1
+    validity mask, padding the tail batch by repeating the last sample.
+    Returns ``(xb, yb, mask, n)`` with ``mask.sum() == n == len(x)``."""
+    n = len(x)
+    if n == 0:
+        raise ValueError("cannot evaluate an empty dataset")
+    bs = min(batch_size, n)
+    nb = -(-n // bs)                              # ceil division
+    pad = nb * bs - n
+    if pad:
+        x = np.concatenate([x, np.repeat(x[-1:], pad, axis=0)])
+        y = np.concatenate([y, np.repeat(y[-1:], pad, axis=0)])
+    mask = np.zeros((nb * bs,), np.float32)
+    mask[:n] = 1.0
+    return (x.reshape(nb, bs, *x.shape[1:]), y.reshape(nb, bs),
+            mask.reshape(nb, bs), n)
+
+
+class SplitEvaluator:
+    """Per-client evaluation of client-side, server-side, and entropy-gated
+    adaptive (Alg. 3) predictions, one compiled scan per split layer."""
+
+    def __init__(self, model, profile: HeteroProfile, strategy: str):
+        self.model = model
+        self.profile = profile
+        self.strategy = strategy
+        self._fns: Dict[int, Callable] = {}
+
+    def _fn(self, li: int) -> Callable:
+        if li in self._fns:
+            return self._fns[li]
+        model = self.model
+
+        def sums(client, server, xb, yb, mask, tau):
+            def body(acc, inp):
+                x, y, m = inp
+                h, clog, _ = model.client_forward(client["trainable"],
+                                                  client["state"], x,
+                                                  train=False)
+                slog, _ = model.server_forward(server["trainable"],
+                                               server["state"], h, li,
+                                               train=False)
+                cpred = jnp.argmax(clog, axis=-1)
+                spred = jnp.argmax(slog, axis=-1)
+                H = softmax_entropy(clog)
+                exit_mask = (H < tau).astype(jnp.float32)  # Alg. 3: H < tau
+                apred = jnp.where(exit_mask > 0, cpred, spred)
+                batch = jnp.stack([
+                    jnp.sum((cpred == y) * m),
+                    jnp.sum((spred == y) * m),
+                    jnp.sum((apred == y) * m),
+                    jnp.sum(exit_mask * m),
+                    jnp.sum(H * m),
+                ])
+                return acc + batch, None
+
+            acc, _ = jax.lax.scan(body, jnp.zeros((5,), jnp.float32),
+                                  (xb, yb, mask))
+            return acc
+
+        self._fns[li] = jax.jit(sums)
+        return self._fns[li]
+
+    def _per_client_sums(self, state: TrainState, x, y, tau: float,
+                         batch_size: int):
+        xb, yb, mask, n = pad_batches(np.asarray(x), np.asarray(y),
+                                      batch_size)
+        xb, yb, mask = jnp.asarray(xb), jnp.asarray(yb), jnp.asarray(mask)
+        out = []
+        for i, li in enumerate(self.profile.split_layers):
+            sidx = 0 if self.strategy == "sequential" else i
+            acc = self._fn(li)(state.clients[i], state.servers[sidx],
+                               xb, yb, mask, jnp.float32(tau))
+            out.append(np.asarray(acc))          # one host sync per client
+        return out, n
+
+    def evaluate(self, state: TrainState, x, y, batch_size: int = 512
+                 ) -> Dict[str, Any]:
+        """Per-client client-side and server-side accuracy over the FULL
+        test set (tail batch included)."""
+        sums, n = self._per_client_sums(state, x, y, 0.0, batch_size)
+        return {"client_acc": [float(s[_CLIENT_OK]) / n for s in sums],
+                "server_acc": [float(s[_SERVER_OK]) / n for s in sums],
+                "split_layers": list(self.profile.split_layers)}
+
+    def evaluate_adaptive(self, state: TrainState, x, y, tau: float,
+                          batch_size: int = 512) -> Dict[str, Any]:
+        """Alg. 3 collaborative inference at entropy threshold ``tau``
+        (exit iff H < tau; see DESIGN.md on the paper's sign convention)."""
+        sums, n = self._per_client_sums(state, x, y, tau, batch_size)
+        return {"acc": [float(s[_ADAPTIVE_OK]) / n for s in sums],
+                "client_ratio": [float(s[_EXITS]) / n for s in sums],
+                "mean_entropy": [float(s[_ENT_SUM]) / n for s in sums]}

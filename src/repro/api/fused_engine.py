@@ -1,0 +1,224 @@
+"""Fused engine: scan + vmap whole-chunk execution as a pure
+``TrainState -> TrainState`` executor (see docs/ENGINES.md).
+
+  * **Cohorts + vmap** — clients sharing a split layer have identical pytree
+    structure, so each cohort is stacked along a leading lane axis and its
+    combined client+server step runs under one ``jax.vmap``.
+  * **Rounds under lax.scan** — the exact minibatch sequence the reference
+    engine would draw is pre-staged as ``[rounds, E, k, B, ...]`` device
+    tensors and the whole chunk rolls through one ``jax.lax.scan`` with
+    donated carry; losses come back as stacked per-round arrays (one host
+    sync per chunk).
+  * **In-graph Eq. (1)** — ``stacked_cross_layer_aggregate`` under a
+    ``lax.cond`` on the traced ``(t+1) % aggregate_every == 0`` predicate.
+
+Numerically equivalent to the reference engine (both compose the same
+``make_client_step``/``make_server_step`` builders); enforced by
+``tests/test_fused_engine.py`` and ``tests/test_session.py``.  The
+Sequential strategy (Alg. 1) is inherently ordered across clients and is
+not supported — ``resolve_engine("auto", ...)`` falls back to the
+reference engine for it.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.engines import (Engine, SessionContext, cohort_layout,
+                               ragged_cohort_reason, register_engine)
+from repro.api.state import TrainState
+from repro.core.aggregation import stacked_cross_layer_aggregate
+from repro.core.splitee import stack_pytrees, unstack_pytrees
+from repro.core.strategies import (RoundMetrics, make_client_step,
+                                   make_server_step)
+from repro.data.pipeline import prestage_batches
+
+
+@register_engine("fused")
+class FusedEngine(Engine):
+
+    def __init__(self, ctx: SessionContext):
+        super().__init__(ctx)
+        self._cohort_lis, self._lanes = cohort_layout(
+            ctx.profile.split_layers)
+        self._counts: Dict[int, int] = {li: len(v)
+                                        for li, v in self._lanes.items()}
+        self._chunk_fns: Dict[int, Callable] = {}
+
+    @classmethod
+    def supports(cls, ctx: SessionContext):
+        if ctx.strategy not in ("averaging", "distributed"):
+            return (f"fused engine supports averaging/distributed, not "
+                    f"{ctx.strategy!r}; the Sequential strategy is ordered "
+                    f"across clients — use the reference engine")
+        return ragged_cohort_reason(ctx)
+
+    # -------------------------------------------------------------- tracing
+    def _vstep(self, li: int) -> Callable:
+        """One cohort step: the shared client+server step builders composed
+        exactly as the reference engine's round body, vmapped over lanes."""
+        cstep = make_client_step(self.ctx.model, self.ctx.opt_cfg)
+        sstep = make_server_step(self.ctx.model, self.ctx.opt_cfg, li)
+
+        def combined(client, copt, server, sopt, x, y, lr, lr_s):
+            tr, st, copt, h, closs = cstep(client["trainable"],
+                                           client["state"], copt, x, y, lr)
+            h = jax.lax.stop_gradient(h)      # no server->client gradient
+            srv, sst, sopt, sloss = sstep(server["trainable"],
+                                          server["state"], sopt, h, y, lr_s)
+            return ({"trainable": tr, "state": st}, copt,
+                    {"trainable": srv, "state": sst}, sopt, closs, sloss)
+
+        return jax.vmap(combined, in_axes=(0, 0, 0, 0, 0, 0, None, None))
+
+    def _chunk_fn(self, local_epochs: int) -> Callable:
+        """Jitted ``(carry, ts, xs, ys) -> (carry, (closs[n], sloss[n]))``
+        scanning the round body over a chunk; carry buffers are donated."""
+        if local_epochs in self._chunk_fns:
+            return self._chunk_fns[local_epochs]
+
+        ctx = self.ctx
+        cohort_lis = self._cohort_lis
+        counts = self._counts
+        vsteps = {li: self._vstep(li) for li in cohort_lis}
+        denom = float(ctx.N * local_epochs)
+        averaging = ctx.strategy == "averaging"
+        agg_every = ctx.cfg.aggregate_every
+        schedule, lr_div = ctx.schedule, ctx.server_lr_div
+
+        def epoch_body(carry, bx, by, lr, lr_s):
+            out, csum, ssum = {}, 0.0, 0.0
+            for li in cohort_lis:
+                client, copt, server, sopt = carry[li]
+                client, copt, server, sopt, closs, sloss = vsteps[li](
+                    client, copt, server, sopt, bx[li], by[li], lr, lr_s)
+                out[li] = (client, copt, server, sopt)
+                csum = csum + jnp.sum(closs)
+                ssum = ssum + jnp.sum(sloss)
+            return out, (csum, ssum)
+
+        def round_body(carry, inp):
+            t, xs, ys = inp
+            lr = schedule(t)
+            lr_s = lr / lr_div
+
+            def body(c, data):
+                return epoch_body(c, data[0], data[1], lr, lr_s)
+
+            carry, (cs, ss) = jax.lax.scan(body, carry, (xs, ys))
+            if averaging:
+                def aggregated(c):
+                    tr = stacked_cross_layer_aggregate(
+                        {li: c[li][2]["trainable"] for li in cohort_lis},
+                        counts)
+                    st = stacked_cross_layer_aggregate(
+                        {li: c[li][2]["state"] for li in cohort_lis},
+                        counts)
+                    return {li: (c[li][0], c[li][1],
+                                 {"trainable": tr[li], "state": st[li]},
+                                 c[li][3])
+                            for li in cohort_lis}
+
+                # cond (not where) so non-boundary rounds skip the Eq. (1)
+                # means entirely — still in-graph, still no host sync
+                do = ((t + 1) % agg_every) == 0
+                carry = jax.lax.cond(do, aggregated, lambda c: c, carry)
+            return carry, (jnp.sum(cs) / denom, jnp.sum(ss) / denom)
+
+        def chunk(carry, ts, xs, ys):
+            return jax.lax.scan(round_body, carry, (ts, xs, ys))
+
+        fn = jax.jit(chunk, donate_argnums=(0,))
+        self._chunk_fns[local_epochs] = fn
+        return fn
+
+    # ------------------------------------------------------------- staging
+    def _stage_chunk(self, rounds: int, local_epochs: int):
+        """Draw the chunk's minibatches through the session's data cursor
+        (the same sequence the reference engine would consume) and stack
+        them as ``{li: [rounds, E, k, B, ...]}`` device arrays."""
+        def drawn(i):
+            while True:
+                yield self.ctx.data.draw(i)
+
+        per_client = [prestage_batches(drawn(i), rounds, local_epochs)
+                      for i in range(self.ctx.N)]
+        xs, ys = {}, {}
+        for li in self._cohort_lis:
+            lanes = self._lanes[li]
+            xs[li] = jnp.asarray(np.stack([per_client[i][0] for i in lanes],
+                                          axis=2))
+            ys[li] = jnp.asarray(np.stack([per_client[i][1] for i in lanes],
+                                          axis=2))
+        return xs, ys
+
+    def _stack_carry(self, clients, copts, servers, sopts):
+        model = self.ctx.model
+        carry = {}
+        for li in self._cohort_lis:
+            lanes = self._lanes[li]
+            carry[li] = (
+                model.stack_clients([clients[i] for i in lanes]),
+                stack_pytrees([copts[i] for i in lanes]),
+                model.stack_clients([servers[i] for i in lanes]),
+                stack_pytrees([sopts[i] for i in lanes]),
+            )
+        return carry
+
+    def _unstack_carry(self, carry, clients, copts, servers, sopts):
+        for li in self._cohort_lis:
+            lanes = self._lanes[li]
+            cs, co, ss, so = (unstack_pytrees(t, len(lanes))
+                              for t in carry[li])
+            for j, i in enumerate(lanes):
+                clients[i], copts[i] = cs[j], co[j]
+                servers[i], sopts[i] = ss[j], so[j]
+
+    # ------------------------------------------------------------ training
+    def run(self, state: TrainState, rounds: int, local_epochs: int = 1,
+            log_every: int = 0, chunk_rounds: int = 0
+            ) -> Tuple[TrainState, List[RoundMetrics]]:
+        """``chunk_rounds`` bounds how many rounds of pre-staged data are
+        resident at once (0 = the whole run is one compiled chunk)."""
+        self.ctx.data.align(state.batches_drawn)
+        chunk = chunk_rounds if chunk_rounds > 0 else rounds
+        metrics: List[RoundMetrics] = []
+        done = 0
+        while done < rounds:
+            n = min(chunk, rounds - done)
+            state, ms = self._run_chunk(state, n, local_epochs, log_every)
+            metrics.extend(ms)
+            done += n
+        return state, metrics
+
+    def _run_chunk(self, state: TrainState, n: int, local_epochs: int,
+                   log_every: int) -> Tuple[TrainState, List[RoundMetrics]]:
+        clients, copts = list(state.clients), list(state.client_opts)
+        servers, sopts = list(state.servers), list(state.server_opts)
+        t0 = int(state.round)
+
+        xs, ys = self._stage_chunk(n, local_epochs)
+        ts = jnp.arange(t0, t0 + n, dtype=jnp.int32)
+        carry, (closs, sloss) = self._chunk_fn(local_epochs)(
+            self._stack_carry(clients, copts, servers, sopts), ts, xs, ys)
+        self._unstack_carry(carry, clients, copts, servers, sopts)
+
+        closs, sloss = np.asarray(closs), np.asarray(sloss)  # one sync
+        metrics = []
+        for r in range(n):
+            m = RoundMetrics(t0 + r, float(closs[r]), float(sloss[r]))
+            metrics.append(m)
+            if log_every and (m.round % log_every == 0):
+                print(f"round {m.round:4d}  client_loss {m.client_loss:.4f}"
+                      f"  server_loss {m.server_loss:.4f}")
+
+        new_state = state.replace(
+            clients=tuple(clients), client_opts=tuple(copts),
+            servers=tuple(servers), server_opts=tuple(sopts),
+            round=jnp.asarray(t0 + n, jnp.int32),
+            batches_drawn=state.batches_drawn
+            + jnp.asarray(n * local_epochs, jnp.int32))
+        return new_state, metrics

@@ -1,0 +1,81 @@
+"""The ``SplitModel`` protocol — the adapter contract between models and
+training engines.
+
+``ResNetSplitModel`` and ``MLPSplitModel`` (core/splitee.py) satisfied this
+interface by duck typing; the protocol makes the contract explicit and
+checkable.  Any object implementing it can be trained by every registered
+engine (api/engines.py) through :class:`repro.api.TrainSession`.
+
+Pytree conventions the engines rely on (see docs/API.md):
+
+  * ``make_client(li)``/``make_server(li)`` return ``{"trainable": ...,
+    "state": ...}`` dicts; ``trainable`` holds everything the optimizer
+    updates, ``state`` carries non-differentiated statistics (BatchNorm
+    running stats; ``{}`` if none).
+  * Server trainables are keyed ``layer{l}``/``head`` so Eq. (1)
+    cross-layer aggregation matches layers by name across heterogeneous
+    split depths.
+  * All clients/servers sharing a split layer ``l_i`` must have identical
+    pytree structure (same init seed per the paper §III-B), so cohorts can
+    be stacked along a lane axis for the fused engine.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Protocol, Sequence, Tuple, runtime_checkable
+
+
+@runtime_checkable
+class SplitModel(Protocol):
+    """Adapter splitting a layered network at a per-client cut layer."""
+
+    @property
+    def num_layers(self) -> int:
+        """Depth L of the full network; valid cut layers are 1..L-1."""
+        ...
+
+    def make_client(self, li: int) -> Dict[str, Any]:
+        """Client-side net for cut layer ``li``: layers 1..li + exit head."""
+        ...
+
+    def make_server(self, li: int) -> Dict[str, Any]:
+        """Server-side net for cut layer ``li``: layers li+1..L + head."""
+        ...
+
+    def client_forward(self, trainable: Any, state: Any, x: Any, train: bool
+                       ) -> Tuple[Any, Any, Any]:
+        """``(h, client_logits, new_state)`` — features at the cut plus the
+        early-exit logits."""
+        ...
+
+    def server_forward(self, trainable: Any, state: Any, h: Any, li: int,
+                       train: bool) -> Tuple[Any, Any]:
+        """``(server_logits, new_state)`` from transmitted features ``h``."""
+        ...
+
+    def stack_clients(self, trees: Sequence[Any]) -> Any:
+        """Stack same-structure per-client pytrees along a lane axis."""
+        ...
+
+    def unstack(self, stacked: Any, n: int) -> list:
+        """Inverse of :meth:`stack_clients`."""
+        ...
+
+
+_REQUIRED_METHODS = ("make_client", "make_server", "client_forward",
+                     "server_forward", "stack_clients", "unstack")
+
+
+def assert_split_model(model: Any) -> None:
+    """Raise ``TypeError`` with a precise message if ``model`` does not
+    structurally conform to :class:`SplitModel`.  Called by
+    ``TrainSession`` at construction so misconfigured adapters fail at the
+    facade boundary, not deep inside a jitted step."""
+    missing = [m for m in _REQUIRED_METHODS
+               if not callable(getattr(model, m, None))]
+    if not hasattr(model, "num_layers"):
+        missing.append("num_layers")
+    if missing or not isinstance(model, SplitModel):
+        what = f"missing or non-callable: {missing}" if missing else \
+            "see repro.api.protocol.SplitModel"
+        raise TypeError(f"{type(model).__name__} does not implement the "
+                        f"SplitModel protocol ({what})")

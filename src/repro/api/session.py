@@ -1,0 +1,191 @@
+"""``TrainSession`` — the one front door for Hetero-SplitEE training.
+
+A session binds a :class:`~repro.api.protocol.SplitModel` adapter, the
+paper's configuration dataclasses, per-client data shards, and a registered
+engine; all mutable progress lives in one immutable
+:class:`~repro.api.state.TrainState` pytree that the engine consumes and
+returns.  Because the state is a plain pytree, a session can be saved,
+restored, and handed between engines with a resume-equivalence guarantee:
+training 2k rounds equals training k, saving, restoring, and training k —
+on parameters, Adam moments, BN statistics, and per-round metrics
+(tests/test_session.py).
+
+    session = TrainSession.from_config(model, splitee_cfg, opt_cfg,
+                                       client_data, batch_size=64,
+                                       engine="auto")
+    session.train(rounds=100)
+    session.save("ckpt/run1")
+    ...
+    session = TrainSession.restore("ckpt/run1", model, client_data)
+    session.train(rounds=100)            # continues round 100..199
+    session.evaluate(x_test, y_test)
+
+See docs/API.md for the full lifecycle and the checkpoint layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import fused_engine as _fused_engine      # noqa: F401 (registers)
+from repro.api import reference_engine as _reference_engine  # noqa: F401
+from repro.api.engines import SessionContext, resolve_engine
+from repro.api.evaluation import SplitEvaluator
+from repro.api.protocol import assert_split_model
+from repro.api.state import TrainState, init_train_state
+from repro.checkpoint import load_pytree, save_pytree
+from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
+from repro.core.strategies import RoundMetrics
+
+#: checkpoint manifest format version (bump on layout changes)
+CHECKPOINT_FORMAT = 1
+
+
+class TrainSession:
+    """Facade over (model adapter, configs, data, engine, TrainState)."""
+
+    def __init__(self, model, splitee_cfg: SplitEEConfig,
+                 opt_cfg: OptimizerConfig,
+                 client_data: Sequence[Tuple[np.ndarray, np.ndarray]],
+                 batch_size: int, *, engine: str = "auto",
+                 augment=None, seed: int = 0,
+                 state: Optional[TrainState] = None,
+                 history: Optional[List[RoundMetrics]] = None):
+        assert_split_model(model)
+        self.ctx = SessionContext(model, splitee_cfg, opt_cfg, client_data,
+                                  batch_size, augment=augment, seed=seed)
+        self.engine = resolve_engine(engine, self.ctx)(self.ctx)
+        self.state = (state if state is not None
+                      else init_train_state(model, splitee_cfg, opt_cfg))
+        self.history: List[RoundMetrics] = list(history or [])
+        self._evaluator = SplitEvaluator(model, self.ctx.profile,
+                                         self.ctx.strategy)
+
+    @classmethod
+    def from_config(cls, model, splitee_cfg: SplitEEConfig,
+                    opt_cfg: OptimizerConfig,
+                    data: Sequence[Tuple[np.ndarray, np.ndarray]],
+                    batch_size: int = 64, *, engine: str = "auto",
+                    augment=None, seed: int = 0) -> "TrainSession":
+        """The canonical constructor (same arguments as ``__init__``; named
+        for symmetry with ``restore``)."""
+        return cls(model, splitee_cfg, opt_cfg, data, batch_size,
+                   engine=engine, augment=augment, seed=seed)
+
+    # ---------------------------------------------------------- properties
+    @property
+    def model(self):
+        return self.ctx.model
+
+    @property
+    def round(self) -> int:
+        """Global rounds completed so far."""
+        return int(self.state.round)
+
+    @property
+    def engine_name(self) -> str:
+        return self.engine.name
+
+    # ------------------------------------------------------------ training
+    def train(self, rounds: int, local_epochs: int = 1, log_every: int = 0,
+              chunk_rounds: int = 0) -> List[RoundMetrics]:
+        """Advance the state by ``rounds`` rounds; returns the new rounds'
+        metrics (also appended to ``self.history``)."""
+        self.state, metrics = self.engine.run(
+            self.state, rounds, local_epochs=local_epochs,
+            log_every=log_every, chunk_rounds=chunk_rounds)
+        self.history.extend(metrics)
+        return metrics
+
+    def run(self, rounds: int, local_epochs: int = 1, log_every: int = 0,
+            chunk_rounds: int = 0) -> List[RoundMetrics]:
+        """Back-compat alias for :meth:`train` returning the full history
+        (the old ``HeteroTrainer.run`` contract)."""
+        self.train(rounds, local_epochs, log_every, chunk_rounds)
+        return self.history
+
+    # ---------------------------------------------------------- evaluation
+    def evaluate(self, x, y, batch_size: int = 512) -> Dict[str, Any]:
+        return self._evaluator.evaluate(self.state, x, y, batch_size)
+
+    def evaluate_adaptive(self, x, y, tau: float, batch_size: int = 512
+                          ) -> Dict[str, Any]:
+        return self._evaluator.evaluate_adaptive(self.state, x, y, tau,
+                                                 batch_size)
+
+    # -------------------------------------------------------- checkpointing
+    def save(self, path: str) -> None:
+        """Write ``path + '.npz'`` (the full TrainState pytree) and
+        ``path + '.json'`` (structure manifest + session metadata).  The
+        model adapter and the data shards are NOT serialized — pass the
+        same ones to :meth:`restore`."""
+        opt = dataclasses.asdict(self.ctx.opt_cfg)
+        opt["state_dtype"] = jnp.dtype(opt["state_dtype"]).name
+        meta = {
+            "format": CHECKPOINT_FORMAT,
+            "kind": "train_session",
+            "engine": self.engine.name,
+            "splitee": {
+                "split_layers": list(self.ctx.profile.split_layers),
+                "strategy": self.ctx.cfg.strategy,
+                "server_lr_divisor": self.ctx.cfg.server_lr_divisor,
+                "aggregate_every": self.ctx.cfg.aggregate_every,
+                "entropy_threshold": self.ctx.cfg.entropy_threshold,
+            },
+            "optimizer": opt,
+            "batch_size": self.ctx.batch_size,
+            "seed": self.ctx.seed,
+            # the augment callable itself is not serializable, but whether
+            # one was active is: the data replay diverges if it differs
+            "augmented": self.ctx.augment is not None,
+            "round": self.round,
+            "history": [dataclasses.asdict(m) for m in self.history],
+        }
+        save_pytree(path, self.state, metadata=meta)
+
+    @classmethod
+    def restore(cls, path: str, model,
+                client_data: Sequence[Tuple[np.ndarray, np.ndarray]],
+                *, engine: Optional[str] = None, augment=None
+                ) -> "TrainSession":
+        """Rebuild a session from :meth:`save` output.  Configuration comes
+        from the manifest; ``model`` and ``client_data`` must be the ones
+        the run was built with (the state carries every learned tensor, the
+        adapter only its architecture/seed).  ``engine`` overrides the saved
+        engine name — a state saved by one engine restores into any other
+        that supports the strategy."""
+        with open(path + ".json") as f:
+            meta = json.load(f)["metadata"]
+        if meta.get("kind") != "train_session":
+            raise ValueError(f"{path} is not a TrainSession checkpoint")
+        if meta.get("format") != CHECKPOINT_FORMAT:
+            raise ValueError(
+                f"{path} has checkpoint format {meta.get('format')!r}; this "
+                f"version reads format {CHECKPOINT_FORMAT}")
+        if meta["augmented"] != (augment is not None):
+            raise ValueError(
+                f"checkpoint was saved with augment "
+                f"{'active' if meta['augmented'] else 'inactive'} but "
+                f"restore got augment={augment!r}; the replayed data stream "
+                f"would diverge — pass the original augment function")
+        sp = meta["splitee"]
+        splitee_cfg = SplitEEConfig(
+            profile=HeteroProfile(tuple(sp["split_layers"])),
+            strategy=sp["strategy"],
+            server_lr_divisor=sp["server_lr_divisor"],
+            aggregate_every=sp["aggregate_every"],
+            entropy_threshold=sp["entropy_threshold"])
+        opt = dict(meta["optimizer"])
+        opt["state_dtype"] = jnp.dtype(opt["state_dtype"])
+        opt_cfg = OptimizerConfig(**opt)
+        session = cls(model, splitee_cfg, opt_cfg, client_data,
+                      meta["batch_size"], engine=engine or meta["engine"],
+                      augment=augment, seed=meta["seed"])
+        # fresh init has the identical pytree structure: restore into it
+        session.state = load_pytree(path, session.state)
+        session.history = [RoundMetrics(**m) for m in meta["history"]]
+        return session

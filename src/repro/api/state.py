@@ -1,0 +1,88 @@
+"""``TrainState`` — the complete training state as one immutable pytree.
+
+Everything a Hetero-SplitEE run accumulates lives here: per-client nets and
+Adam moments, per-server nets and moments, the global round counter, and the
+per-client data-iterator cursors.  Engines (api/engines.py) are pure
+``state -> state`` executors over this type; checkpointing is
+``checkpoint.save_pytree(path, state)`` plus a restore into a structurally
+identical fresh state — there is no hidden trainer-attribute state anywhere.
+
+Layout (see docs/API.md):
+
+  * ``clients[i]``      — ``{"trainable": ..., "state": ...}`` for client i
+  * ``client_opts[i]``  — ``AdamState`` for client i
+  * ``servers[j]``      — server nets: one shared entry for the Sequential
+    strategy, one per client for Averaging / distributed
+  * ``server_opts[j]``  — ``AdamState`` per server entry
+  * ``round``           — int32 scalar, global rounds completed
+  * ``batches_drawn``   — int32 ``[N]``, minibatches drawn per client; on
+    restore the session replays each seeded ``batch_iterator`` to this
+    cursor so the resumed run consumes the exact upcoming batch sequence
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig, SplitEEConfig
+from repro.optim import AdamState, adam_init
+
+
+@dataclass(frozen=True)
+class TrainState:
+    clients: Tuple[Any, ...]
+    client_opts: Tuple[AdamState, ...]
+    servers: Tuple[Any, ...]
+    server_opts: Tuple[AdamState, ...]
+    round: jnp.ndarray            # int32 scalar
+    batches_drawn: jnp.ndarray    # int32 [num_clients]
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.clients)
+
+    def replace(self, **kw) -> "TrainState":
+        return dataclasses.replace(self, **kw)
+
+
+_FIELDS = ("clients", "client_opts", "servers", "server_opts", "round",
+           "batches_drawn")
+
+jax.tree_util.register_pytree_with_keys(
+    TrainState,
+    lambda s: (tuple((jax.tree_util.GetAttrKey(f), getattr(s, f))
+                     for f in _FIELDS), None),
+    lambda _, children: TrainState(*children),
+    flatten_func=lambda s: (tuple(getattr(s, f) for f in _FIELDS), None),
+)
+
+
+def init_train_state(model, splitee_cfg: SplitEEConfig,
+                     opt_cfg: OptimizerConfig) -> TrainState:
+    """Round-zero state: all nets initialized from the model adapter's seed
+    (paper §III-B — common layers start identical across clients)."""
+    profile = splitee_cfg.profile
+    splits = profile.split_layers
+    clients = tuple(model.make_client(li) for li in splits)
+    client_opts = tuple(adam_init(c["trainable"], opt_cfg) for c in clients)
+
+    if splitee_cfg.strategy == "sequential":
+        shared = model.make_server(min(splits))      # one shared server model
+        servers = (shared,)
+        server_opts = (adam_init(shared["trainable"], opt_cfg),)
+    elif splitee_cfg.strategy in ("averaging", "distributed"):
+        servers = tuple(model.make_server(li) for li in splits)
+        server_opts = tuple(adam_init(s["trainable"], opt_cfg)
+                            for s in servers)
+    else:
+        raise ValueError(f"unknown strategy {splitee_cfg.strategy!r}")
+
+    return TrainState(
+        clients=clients, client_opts=client_opts,
+        servers=servers, server_opts=server_opts,
+        round=jnp.zeros((), jnp.int32),
+        batches_drawn=jnp.zeros((profile.num_groups,), jnp.int32))

@@ -148,8 +148,12 @@ class HeteroProfile:
         return tuple(sorted(set(self.split_layers)))
 
     def participation(self, layer: int) -> Tuple[int, ...]:
-        """Paper Eq. (1) participation set C_l = {i : l_i < l} (0-indexed
-        layer ``layer`` is *server-side* for client i iff l_i <= layer)."""
+        """Eq. (1) participation set over 0-indexed layers:
+        ``C_l = {i : l_i <= l}`` — layer ``l`` is *server-side* for client i
+        iff ``l_i <= l``, since client i holds layers ``[0, l_i)``.  (The
+        paper writes ``C_l = {i : l_i < l}`` with 1-indexed ``l``; both
+        describe the same set, and a client sitting exactly at the boundary
+        ``l_i == l`` participates.)"""
         return tuple(i for i, li in enumerate(self.split_layers) if li <= layer)
 
 

@@ -1,8 +1,12 @@
 # Hetero-SplitEE core: the paper's contribution as composable JAX modules.
-#   splitee.py      — split specs, per-client model partitioning
+#   splitee.py      — split specs, per-client model partitioning (the
+#                     repro.api.protocol.SplitModel adapters)
 #   losses.py       — CE / entropy / confidence
 #   aggregation.py  — Eq. (1) cross-layer aggregation
-#   strategies.py   — Alg. 1 (Sequential) and Alg. 2 (Averaging), paper-faithful
-#   fused.py        — scan+vmap multi-round engine (docs/ENGINES.md)
+#   strategies.py   — shared client/server step builders + HeteroTrainer shim
+#   fused.py        — FusedHeteroTrainer shim (engines live in repro.api)
 #   spmd.py         — fused SPMD production train step (masked exits + routing)
 #   inference.py    — Alg. 3 entropy-gated adaptive inference
+#
+# Training engines and the TrainSession facade live in repro.api
+# (docs/API.md); the trainer classes here are deprecation shims.

@@ -1,229 +1,37 @@
-"""Fused multi-round training engine: scan + vmap, zero per-step host sync.
+"""Legacy ``FusedHeteroTrainer`` shim.
 
-``FusedHeteroTrainer`` is a second execution backend for the Averaging /
-distributed strategies of ``core/strategies.py``, built for throughput:
-
-  * **Cohorts + vmap** — clients sharing a split layer ``l_i`` have identical
-    pytree structure, so they are stacked along a leading lane axis
-    (``splitee.stack_pytrees``) and their client+server steps run under one
-    ``jax.vmap`` — one compiled step per *cohort*, not per client.
-  * **Rounds under lax.scan** — ``run(rounds, local_epochs)`` pre-stages the
-    exact minibatch sequence the reference engine would draw (same
-    ``batch_iterator``, same seeds) as device-resident ``[rounds, E, k, B,
-    ...]`` tensors and rolls the whole chunk into a ``jax.lax.scan`` with
-    donated carry.  Losses come back as stacked per-round arrays at the end
-    of a chunk — the reference engine's ``float(loss)`` sync per minibatch is
-    gone.
-  * **In-graph aggregation** — Eq. (1) cross-layer aggregation runs inside
-    the scanned round body: a ``lax.cond`` on the traced
-    ``(t+1) % aggregate_every == 0`` predicate applies
-    ``stacked_cross_layer_aggregate`` on boundary rounds and the identity
-    otherwise, so aggregation boundaries never leave the device and
-    non-boundary rounds skip the means entirely.
-
-The engine is numerically equivalent to ``HeteroTrainer`` (the paper-faithful
-oracle) — both compose the same ``make_client_step`` / ``make_server_step``
-builders — and the contract is enforced by ``tests/test_fused_engine.py``;
-see docs/ENGINES.md.  The Sequential strategy (Alg. 1) is inherently ordered
-across clients and stays on the reference engine.
+The scan+vmap multi-round engine now lives in
+``repro.api.fused_engine.FusedEngine`` as a pure ``TrainState -> TrainState``
+executor (see docs/ENGINES.md for the cohort layout, the in-graph Eq. (1)
+aggregation, and the numerical-equivalence contract with the reference
+engine).  This module keeps the historical import path working:
+``FusedHeteroTrainer`` is a ``TrainSession`` shim pinned to the ``"fused"``
+engine, so constructing it with the Sequential strategy or with ragged
+cohort batch sizes still fails loudly at construction — use
+``TrainSession(..., engine="auto")`` to fall back to the reference engine
+instead.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Tuple
+from typing import List
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.aggregation import stacked_cross_layer_aggregate
-from repro.core.splitee import stack_pytrees, unstack_pytrees
-from repro.core.strategies import (HeteroTrainer, RoundMetrics,
-                                   make_client_step, make_server_step)
-from repro.data.pipeline import effective_batch_size, prestage_batches
+from repro.core.strategies import HeteroTrainer, RoundMetrics
 
 
 class FusedHeteroTrainer(HeteroTrainer):
-    """Drop-in replacement for ``HeteroTrainer`` (averaging / distributed)
-    whose ``run`` executes whole chunks of rounds as one compiled program."""
+    """Deprecated: thin shim over ``repro.api.TrainSession`` pinned to the
+    ``"fused"`` engine (averaging / distributed only)."""
 
-    def __init__(self, model, splitee_cfg, opt_cfg, client_data, batch_size,
-                 **kw):
-        super().__init__(model, splitee_cfg, opt_cfg, client_data,
-                         batch_size, **kw)
-        if self.strategy not in ("averaging", "distributed"):
-            raise ValueError(
-                f"FusedHeteroTrainer supports averaging/distributed, not "
-                f"{self.strategy!r}; the Sequential strategy is ordered "
-                f"across clients — use HeteroTrainer.")
-        splits = self.profile.split_layers
-        self._cohort_lis: Tuple[int, ...] = tuple(sorted(set(splits)))
-        self._lanes: Dict[int, List[int]] = {
-            li: [i for i, l in enumerate(splits) if l == li]
-            for li in self._cohort_lis}
-        self._counts: Dict[int, int] = {li: len(v)
-                                        for li, v in self._lanes.items()}
-        # batch_iterator clamps short shards — lanes of one cohort are
-        # stacked into a single [k, B, ...] tensor, so their effective batch
-        # sizes must agree (the reference engine has no such constraint;
-        # fail loudly here instead of inside np.stack)
-        for li, lanes in self._lanes.items():
-            bs = {i: effective_batch_size(len(client_data[i][0]), batch_size)
-                  for i in lanes}
-            if len(set(bs.values())) > 1:
-                raise ValueError(
-                    f"cohort l_i={li} mixes effective batch sizes {bs} "
-                    f"(batch_size={batch_size} clamped to shard length); "
-                    f"equalize client shards or use HeteroTrainer")
-        self._chunk_fns: Dict[int, Callable] = {}
+    _ENGINE = "fused"
 
-    # -------------------------------------------------------------- tracing
-    def _vstep(self, li: int) -> Callable:
-        """One cohort step: the shared client+server step builders composed
-        exactly as the reference engine's ``train_round`` inner loop, then
-        vmapped over the lane axis."""
-        cstep = make_client_step(self.model, self.opt_cfg)
-        sstep = make_server_step(self.model, self.opt_cfg, li)
-
-        def combined(client, copt, server, sopt, x, y, lr, lr_s):
-            tr, st, copt, h, closs = cstep(client["trainable"],
-                                           client["state"], copt, x, y, lr)
-            h = jax.lax.stop_gradient(h)      # no server->client gradient
-            srv, sst, sopt, sloss = sstep(server["trainable"],
-                                          server["state"], sopt, h, y, lr_s)
-            return ({"trainable": tr, "state": st}, copt,
-                    {"trainable": srv, "state": sst}, sopt, closs, sloss)
-
-        return jax.vmap(combined, in_axes=(0, 0, 0, 0, 0, 0, None, None))
-
-    def _chunk_fn(self, local_epochs: int) -> Callable:
-        """Jitted ``(carry, ts, xs, ys) -> (carry, (closs[n], sloss[n]))``
-        scanning the round body over a chunk; carry buffers are donated."""
-        if local_epochs in self._chunk_fns:
-            return self._chunk_fns[local_epochs]
-
-        cohort_lis = self._cohort_lis
-        counts = self._counts
-        vsteps = {li: self._vstep(li) for li in cohort_lis}
-        denom = float(self.N * local_epochs)
-        averaging = self.strategy == "averaging"
-        agg_every = self.cfg.aggregate_every
-        schedule, lr_div = self.schedule, self.server_lr_div
-
-        def epoch_body(carry, bx, by, lr, lr_s):
-            out, csum, ssum = {}, 0.0, 0.0
-            for li in cohort_lis:
-                client, copt, server, sopt = carry[li]
-                client, copt, server, sopt, closs, sloss = vsteps[li](
-                    client, copt, server, sopt, bx[li], by[li], lr, lr_s)
-                out[li] = (client, copt, server, sopt)
-                csum = csum + jnp.sum(closs)
-                ssum = ssum + jnp.sum(sloss)
-            return out, (csum, ssum)
-
-        def round_body(carry, inp):
-            t, xs, ys = inp
-            lr = schedule(t)
-            lr_s = lr / lr_div
-
-            def body(c, data):
-                return epoch_body(c, data[0], data[1], lr, lr_s)
-
-            carry, (cs, ss) = jax.lax.scan(body, carry, (xs, ys))
-            if averaging:
-                def aggregated(c):
-                    tr = stacked_cross_layer_aggregate(
-                        {li: c[li][2]["trainable"] for li in cohort_lis},
-                        counts)
-                    st = stacked_cross_layer_aggregate(
-                        {li: c[li][2]["state"] for li in cohort_lis},
-                        counts)
-                    return {li: (c[li][0], c[li][1],
-                                 {"trainable": tr[li], "state": st[li]},
-                                 c[li][3])
-                            for li in cohort_lis}
-
-                # cond (not where) so non-boundary rounds skip the Eq. (1)
-                # means entirely — still in-graph, still no host sync
-                do = ((t + 1) % agg_every) == 0
-                carry = jax.lax.cond(do, aggregated, lambda c: c, carry)
-            return carry, (jnp.sum(cs) / denom, jnp.sum(ss) / denom)
-
-        def chunk(carry, ts, xs, ys):
-            return jax.lax.scan(round_body, carry, (ts, xs, ys))
-
-        fn = jax.jit(chunk, donate_argnums=(0,))
-        self._chunk_fns[local_epochs] = fn
-        return fn
-
-    # ------------------------------------------------------------- staging
-    def _stage_chunk(self, rounds: int, local_epochs: int):
-        """Draw the chunk's minibatches from the per-client iterators (the
-        same sequence the reference engine would consume) and stack them as
-        ``{li: [rounds, E, k, B, ...]}`` device arrays."""
-        per_client = [prestage_batches(self.iters[i], rounds, local_epochs)
-                      for i in range(self.N)]
-        xs, ys = {}, {}
-        for li in self._cohort_lis:
-            lanes = self._lanes[li]
-            xs[li] = jnp.asarray(np.stack([per_client[i][0] for i in lanes],
-                                          axis=2))
-            ys[li] = jnp.asarray(np.stack([per_client[i][1] for i in lanes],
-                                          axis=2))
-        return xs, ys
-
-    def _stack_carry(self):
-        carry = {}
-        for li in self._cohort_lis:
-            lanes = self._lanes[li]
-            carry[li] = (
-                self.model.stack_clients([self.clients[i] for i in lanes]),
-                stack_pytrees([self.client_opts[i] for i in lanes]),
-                self.model.stack_clients([self.servers[i] for i in lanes]),
-                stack_pytrees([self.server_opts[i] for i in lanes]),
-            )
-        return carry
-
-    def _unstack_carry(self, carry) -> None:
-        for li in self._cohort_lis:
-            lanes = self._lanes[li]
-            clients, copts, servers, sopts = (
-                unstack_pytrees(t, len(lanes)) for t in carry[li])
-            for j, i in enumerate(lanes):
-                self.clients[i] = clients[j]
-                self.client_opts[i] = copts[j]
-                self.servers[i] = servers[j]
-                self.server_opts[i] = sopts[j]
-
-    # ------------------------------------------------------------ training
     def train_round(self, local_epochs: int = 1) -> RoundMetrics:
         """Single fused round (one-round chunk); prefer ``run`` for chunks."""
-        return self.run(1, local_epochs)[-1]
+        return self.session.train(1, local_epochs)[-1]
 
     def run(self, rounds: int, local_epochs: int = 1, log_every: int = 0,
             chunk_rounds: int = 0) -> List[RoundMetrics]:
         """Train ``rounds`` rounds.  ``chunk_rounds`` bounds how many rounds
         of pre-staged data are resident at once (0 = the whole run is one
         compiled chunk).  Host sync happens once per chunk."""
-        chunk = chunk_rounds if chunk_rounds > 0 else rounds
-        done = 0
-        while done < rounds:
-            n = min(chunk, rounds - done)
-            self._run_chunk(n, local_epochs, log_every)
-            done += n
-        return self.history
-
-    def _run_chunk(self, n: int, local_epochs: int, log_every: int) -> None:
-        xs, ys = self._stage_chunk(n, local_epochs)
-        ts = jnp.arange(self._round, self._round + n, dtype=jnp.int32)
-        carry, (closs, sloss) = self._chunk_fn(local_epochs)(
-            self._stack_carry(), ts, xs, ys)
-        self._unstack_carry(carry)
-        closs, sloss = np.asarray(closs), np.asarray(sloss)  # one sync
-        for r in range(n):
-            m = RoundMetrics(self._round + r, float(closs[r]),
-                             float(sloss[r]))
-            self.history.append(m)
-            if log_every and (m.round % log_every == 0):
-                print(f"round {m.round:4d}  client_loss {m.client_loss:.4f}"
-                      f"  server_loss {m.server_loss:.4f}")
-        self._round += n
+        return self.session.run(rounds, local_epochs, log_every,
+                                chunk_rounds=chunk_rounds)

@@ -3,8 +3,9 @@
 + server head), with all models initialized from the same random seed (paper
 §III-B: "Initialize all networks from the same random seed").
 
-Adapters expose a common interface consumed by the paper-faithful strategy
-engines in ``core/strategies.py``:
+Adapters implement the ``repro.api.protocol.SplitModel`` protocol consumed
+by every registered training engine (enforced by the conformance test in
+tests/test_session.py):
 
     make_client(l_i)  -> client pytree  {"trainable": {...}, "state": {...}}
     make_server(l_i)  -> server pytree  {"trainable": {layerK.., head}, "state"}
@@ -153,10 +154,6 @@ class MLPSplitModel(_StackMixin):
                   for k in range(li + 1, self.num_layers + 1)}
         params["head"] = self.full_params["head"]
         return {"trainable": params, "state": {}}
-
-    @property
-    def num_layers_(self):
-        return self.num_layers
 
     def _apply_layers(self, layers: Dict[str, dict], h, keys):
         for k in keys:

@@ -1,38 +1,37 @@
-"""Paper-faithful multi-client training engines.
+"""Shared training-step builders + the legacy ``HeteroTrainer`` shim.
 
-``HeteroTrainer`` implements, literally per the pseudo-code:
-  * **Sequential strategy (Algorithm 1)** — one shared server-side network;
-    per round, each client runs E local minibatch steps (client-side loss on
-    its exit head), and for each minibatch the server performs one update of
-    the shared model on the transmitted features, with the server learning
-    rate divided by N (paper Table II).
-  * **Averaging strategy (Algorithm 2)** — client-specific server-side
-    networks trained in parallel (order-independent), synchronized every
-    round by cross-layer aggregation (Eq. 1).
-  * **distributed** baseline — Averaging without aggregation (each client
-    fully independent), the paper's lower bound.
-  * **centralized** baseline — construct with a single client holding all
-    data (the paper's upper bound, same hierarchical architecture).
+The paper-faithful per-client training loop now lives in
+``repro.api.reference_engine.ReferenceEngine`` as a pure
+``TrainState -> TrainState`` executor behind the :class:`repro.api.TrainSession`
+facade; this module keeps what both engines share:
 
-Gradients never flow from server to client (``h_i`` enters the server step as
-data), and every model is initialized from the same random seed via the
-adapters in ``core/splitee.py``.
+  * :func:`make_client_step` / :func:`make_server_step` — pure functions of
+    ``(pytrees, batch, lr)`` closed over the model/optimizer config only.
+    The reference engine jits them one client at a time (the paper-faithful
+    oracle); the fused engine vmaps the same functions over stacked client
+    cohorts, so every engine runs numerically identical math.
+  * :class:`RoundMetrics` — the per-round metric record.
+  * :class:`HeteroTrainer` — a deprecation shim with the pre-``TrainSession``
+    constructor and attribute surface (``.clients``, ``.servers``,
+    ``.history``, ...), delegating to a session on the reference engine.
+    New code should use ``repro.api.TrainSession`` directly.
+
+Gradients never flow from server to client (``h_i`` enters the server step
+as data), and every model is initialized from the same random seed via the
+adapters in ``core/splitee.py`` (paper §III-B).
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+import warnings
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config import OptimizerConfig, SplitEEConfig
-from repro.core.aggregation import cross_layer_aggregate, _mean_trees
-from repro.core.losses import accuracy, softmax_cross_entropy, softmax_entropy
-from repro.data.pipeline import batch_iterator
-from repro.optim import adam_init, adam_update, make_schedule
+from repro.core.losses import softmax_cross_entropy
+from repro.optim import adam_update
 
 
 @dataclass
@@ -43,11 +42,7 @@ class RoundMetrics:
 
 
 # ---------------------------------------------------------------------------
-# Shared step-builders: pure functions of (pytrees, batch, lr), closed over the
-# model/optimizer config only.  ``HeteroTrainer`` jits them one client at a
-# time (the paper-faithful oracle); ``FusedHeteroTrainer`` (core/fused.py)
-# vmaps the same functions over stacked client cohorts, so both engines run
-# numerically identical math.
+# Shared step-builders
 # ---------------------------------------------------------------------------
 
 
@@ -88,180 +83,103 @@ def make_server_step(model, opt_cfg: OptimizerConfig, li: int) -> Callable:
     return step
 
 
+# ---------------------------------------------------------------------------
+# Legacy trainer shim
+# ---------------------------------------------------------------------------
+
+
 class HeteroTrainer:
-    """Drives one of the cooperative strategies over N heterogeneous clients."""
+    """Deprecated: thin shim over ``repro.api.TrainSession`` pinned to the
+    ``"reference"`` engine.  Exposes the historical mutable-attribute surface
+    as read-only views of the session's ``TrainState``."""
+
+    _ENGINE = "reference"
 
     def __init__(self, model, splitee_cfg: SplitEEConfig,
                  opt_cfg: OptimizerConfig,
                  client_data: Sequence[Tuple[np.ndarray, np.ndarray]],
                  batch_size: int, *, augment=None, seed: int = 0):
-        self.model = model
-        self.cfg = splitee_cfg
-        self.opt_cfg = opt_cfg
-        self.profile = splitee_cfg.profile
-        self.N = self.profile.num_groups
-        assert len(client_data) == self.N
-        self.schedule = make_schedule(opt_cfg)
-        self.strategy = splitee_cfg.strategy
-        self.server_lr_div = splitee_cfg.resolved_server_lr_divisor()
+        warnings.warn(
+            f"{type(self).__name__} is deprecated; use repro.api."
+            f"TrainSession (engine={self._ENGINE!r}) — see docs/API.md",
+            DeprecationWarning, stacklevel=2)
+        from repro.api import TrainSession
+        self.session = TrainSession(model, splitee_cfg, opt_cfg, client_data,
+                                    batch_size, engine=self._ENGINE,
+                                    augment=augment, seed=seed)
 
-        # --- clients -------------------------------------------------------
-        self.clients = [model.make_client(li) for li in self.profile.split_layers]
-        self.client_opts = [adam_init(c["trainable"], opt_cfg) for c in self.clients]
-        self.iters = [
-            batch_iterator(x, y, batch_size, seed=seed + i, augment=augment)
-            for i, (x, y) in enumerate(client_data)
-        ]
+    # ------------------------------------------------- legacy attribute API
+    @property
+    def model(self):
+        return self.session.ctx.model
 
-        # --- server(s) -----------------------------------------------------
-        if self.strategy == "sequential":
-            li_min = min(self.profile.split_layers)
-            shared = model.make_server(li_min)
-            self.servers = [shared] * 1            # one shared model
-            self.server_opts = [adam_init(shared["trainable"], opt_cfg)]
-        elif self.strategy in ("averaging", "distributed"):
-            self.servers = [model.make_server(li)
-                            for li in self.profile.split_layers]
-            self.server_opts = [adam_init(s["trainable"], opt_cfg)
-                                for s in self.servers]
-        else:
-            raise ValueError(self.strategy)
+    @property
+    def cfg(self) -> SplitEEConfig:
+        return self.session.ctx.cfg
 
-        self._cstep: Dict[int, Callable] = {}
-        self._sstep: Dict[int, Callable] = {}
-        self.history: List[RoundMetrics] = []
-        self._round = 0
+    @property
+    def opt_cfg(self) -> OptimizerConfig:
+        return self.session.ctx.opt_cfg
 
-    # ------------------------------------------------------------------ jit
-    def _client_step(self, li: int) -> Callable:
-        # the client step is li-independent (the trainable's own layer keys
-        # determine depth), so one jitted step serves every cohort
-        if 0 not in self._cstep:
-            self._cstep[0] = jax.jit(make_client_step(self.model,
-                                                      self.opt_cfg))
-        return self._cstep[0]
+    @property
+    def profile(self):
+        return self.session.ctx.profile
 
-    def _server_step(self, li: int) -> Callable:
-        if li not in self._sstep:
-            self._sstep[li] = jax.jit(make_server_step(self.model,
-                                                       self.opt_cfg, li))
-        return self._sstep[li]
+    @property
+    def strategy(self) -> str:
+        return self.session.ctx.strategy
+
+    @property
+    def N(self) -> int:
+        return self.session.ctx.N
+
+    @property
+    def schedule(self):
+        return self.session.ctx.schedule
+
+    @property
+    def server_lr_div(self) -> float:
+        return self.session.ctx.server_lr_div
+
+    @property
+    def history(self) -> List[RoundMetrics]:
+        return self.session.history
+
+    # tuples, not lists: the old API's in-place writes (tr.clients[0] = ...)
+    # can no longer take effect — raising beats silently dropping them
+    @property
+    def clients(self) -> Tuple[Dict[str, Any], ...]:
+        return self.session.state.clients
+
+    @property
+    def client_opts(self) -> Tuple[Any, ...]:
+        return self.session.state.client_opts
+
+    @property
+    def servers(self) -> Tuple[Dict[str, Any], ...]:
+        return self.session.state.servers
+
+    @property
+    def server_opts(self) -> Tuple[Any, ...]:
+        return self.session.state.server_opts
+
+    @property
+    def _round(self) -> int:
+        return self.session.round
 
     # ------------------------------------------------------------ training
     def train_round(self, local_epochs: int = 1) -> RoundMetrics:
-        t = self._round
-        lr = self.schedule(t)
-        lr_server = lr / self.server_lr_div
-        closses, slosses = [], []
+        return self.session.train(1, local_epochs)[-1]
 
-        for i, li in enumerate(self.profile.split_layers):
-            cstep = self._client_step(li)
-            sstep = self._server_step(li)
-            sidx = 0 if self.strategy == "sequential" else i
-            server = self.servers[sidx]
-            sopt = self.server_opts[sidx]
-            client, copt = self.clients[i], self.client_opts[i]
-
-            for _ in range(local_epochs):
-                x, y = next(self.iters[i])
-                x, y = jnp.asarray(x), jnp.asarray(y)
-                # client-side training (Alg. 1/2 lines 6-11)
-                tr, st, copt, h, closs = cstep(client["trainable"],
-                                               client["state"], copt, x, y, lr)
-                client = {"trainable": tr, "state": st}
-                # server-side training on h_i (lines 12-16); no grad to client
-                h = jax.lax.stop_gradient(h)
-                str_, sst, sopt, sloss = sstep(server["trainable"],
-                                               server["state"], sopt, h, y,
-                                               lr_server)
-                server = {"trainable": str_, "state": sst}
-                closses.append(float(closs))
-                slosses.append(float(sloss))
-
-            self.clients[i], self.client_opts[i] = client, copt
-            self.servers[sidx], self.server_opts[sidx] = server, sopt
-
-        # cross-layer aggregation (Alg. 2 lines 20-30)
-        if (self.strategy == "averaging"
-                and (t + 1) % self.cfg.aggregate_every == 0):
-            self._aggregate()
-
-        self._round += 1
-        m = RoundMetrics(t, float(np.mean(closses)), float(np.mean(slosses)))
-        self.history.append(m)
-        return m
-
-    def _aggregate(self) -> None:
-        trainables = cross_layer_aggregate(
-            [s["trainable"] for s in self.servers],
-            list(self.profile.split_layers))
-        # aggregate BN statistics of common layers the same way
-        states = cross_layer_aggregate(
-            [s["state"] for s in self.servers],
-            list(self.profile.split_layers), extra_shared_keys=())
-        self.servers = [{"trainable": tr, "state": st}
-                        for tr, st in zip(trainables, states)]
-
-    def run(self, rounds: int, local_epochs: int = 1,
-            log_every: int = 0) -> List[RoundMetrics]:
-        for _ in range(rounds):
-            m = self.train_round(local_epochs)
-            if log_every and (m.round % log_every == 0):
-                print(f"round {m.round:4d}  client_loss {m.client_loss:.4f}  "
-                      f"server_loss {m.server_loss:.4f}")
-        return self.history
+    def run(self, rounds: int, local_epochs: int = 1, log_every: int = 0,
+            **kw) -> List[RoundMetrics]:
+        return self.session.run(rounds, local_epochs, log_every, **kw)
 
     # ---------------------------------------------------------------- eval
     def evaluate(self, x: np.ndarray, y: np.ndarray, batch_size: int = 512
                  ) -> Dict[str, Any]:
-        """Per-client client-side and server-side test accuracy."""
-        out = {"client_acc": [], "server_acc": [], "split_layers":
-               list(self.profile.split_layers)}
-        for i, li in enumerate(self.profile.split_layers):
-            sidx = 0 if self.strategy == "sequential" else i
-            ca, sa, n = 0.0, 0.0, 0
-            for j in range(0, len(x) - batch_size + 1, batch_size):
-                bx = jnp.asarray(x[j : j + batch_size])
-                by = jnp.asarray(y[j : j + batch_size])
-                h, clog, _ = self.model.client_forward(
-                    self.clients[i]["trainable"], self.clients[i]["state"],
-                    bx, train=False)
-                slog, _ = self.model.server_forward(
-                    self.servers[sidx]["trainable"], self.servers[sidx]["state"],
-                    h, li, train=False)
-                ca += float(accuracy(clog, by)) * len(bx)
-                sa += float(accuracy(slog, by)) * len(bx)
-                n += len(bx)
-            out["client_acc"].append(ca / max(n, 1))
-            out["server_acc"].append(sa / max(n, 1))
-        return out
+        return self.session.evaluate(x, y, batch_size)
 
     def evaluate_adaptive(self, x: np.ndarray, y: np.ndarray, tau: float,
                           batch_size: int = 512) -> Dict[str, Any]:
-        """Alg. 3 collaborative inference at entropy threshold ``tau``
-        (exit iff H < tau; see DESIGN.md on the paper's sign convention)."""
-        res = {"acc": [], "client_ratio": [], "mean_entropy": []}
-        for i, li in enumerate(self.profile.split_layers):
-            sidx = 0 if self.strategy == "sequential" else i
-            correct, exits, ent_sum, n = 0.0, 0.0, 0.0, 0
-            for j in range(0, len(x) - batch_size + 1, batch_size):
-                bx = jnp.asarray(x[j : j + batch_size])
-                by = np.asarray(y[j : j + batch_size])
-                h, clog, _ = self.model.client_forward(
-                    self.clients[i]["trainable"], self.clients[i]["state"],
-                    bx, train=False)
-                slog, _ = self.model.server_forward(
-                    self.servers[sidx]["trainable"], self.servers[sidx]["state"],
-                    h, li, train=False)
-                H = np.asarray(softmax_entropy(clog))
-                exit_mask = H < tau
-                pred = np.where(exit_mask, np.asarray(jnp.argmax(clog, -1)),
-                                np.asarray(jnp.argmax(slog, -1)))
-                correct += float((pred == by).sum())
-                exits += float(exit_mask.sum())
-                ent_sum += float(H.sum())
-                n += len(bx)
-            res["acc"].append(correct / max(n, 1))
-            res["client_ratio"].append(exits / max(n, 1))
-            res["mean_entropy"].append(ent_sum / max(n, 1))
-        return res
+        return self.session.evaluate_adaptive(x, y, tau, batch_size)

@@ -15,6 +15,8 @@ Example:
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -22,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as configs_mod
-from repro.checkpoint import save_pytree
+from repro.checkpoint import load_pytree, save_pytree
 from repro.config import (HeteroProfile, OptimizerConfig, SplitEEConfig,
                           TrainConfig)
 from repro.core.spmd import StepConfig, boundary_ids_for_batch, make_train_step
@@ -45,6 +47,10 @@ def main() -> None:
     ap.add_argument("--remat", default="none", choices=["none", "full"])
     ap.add_argument("--mesh", default="host", choices=["host", "single", "multi"])
     ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from --checkpoint if it exists (restores "
+                         "params, Adam moments and the step counter, and "
+                         "skips the already-consumed data batches)")
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -73,6 +79,35 @@ def main() -> None:
           f"devices={len(jax.devices())}  profile={profile.split_layers}")
 
     opt_state = adam_init(params, sc.train.optimizer)
+    start_step = 0
+    if args.resume and args.checkpoint and os.path.exists(
+            args.checkpoint + ".npz"):
+        with open(args.checkpoint + ".json") as f:
+            manifest = json.load(f)
+        saved_keys = manifest["keys"]
+        saved_meta = manifest.get("metadata", {})
+        # the resumed data stream is regenerated from (seed, batch, seq):
+        # a mismatch would silently replay the WRONG batches — fail loudly
+        for knob in ("arch", "batch", "seq", "seed"):
+            want, have = saved_meta.get(knob), getattr(args, knob)
+            if knob == "arch":
+                have = cfg.name
+            if want is not None and want != have:
+                raise SystemExit(
+                    f"--resume mismatch: checkpoint was written with "
+                    f"{knob}={want!r} but this run has {knob}={have!r}")
+        if any(k.startswith("['opt']") for k in saved_keys):
+            restored = load_pytree(args.checkpoint,
+                                   {"params": params, "opt": opt_state})
+            params, opt_state = restored["params"], restored["opt"]
+            start_step = int(opt_state.step)
+            print(f"resumed {args.checkpoint}.npz at step {start_step}")
+        else:
+            # params-only checkpoint from before opt state was saved:
+            # warm-start the weights, restart schedule/moments from step 0
+            params = load_pytree(args.checkpoint, {"params": params})["params"]
+            print(f"resumed {args.checkpoint}.npz (params only — predates "
+                  f"optimizer-state checkpoints; restarting at step 0)")
     step_fn = jax.jit(make_train_step(sc))
 
     data = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=args.seq,
@@ -82,6 +117,8 @@ def main() -> None:
     t0 = time.time()
     for step, (toks, labels) in enumerate(
             data.batches(args.batch, args.steps)):
+        if step < start_step:
+            continue        # replay the seeded stream to the resume point
         batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels),
                  "split_ids": split_ids}
         if cfg.arch_type == "audio":
@@ -107,8 +144,12 @@ def main() -> None:
                   + f"  lr {m['lr']:.2e}  [{dt:.1f}s]")
 
     if args.checkpoint:
-        save_pytree(args.checkpoint, {"params": params},
-                    metadata={"arch": cfg.name, "steps": args.steps})
+        # opt state + step counter ride along so --resume continues the
+        # cosine schedule and Adam moments exactly where this run stopped
+        save_pytree(args.checkpoint, {"params": params, "opt": opt_state},
+                    metadata={"arch": cfg.name, "steps": args.steps,
+                              "batch": args.batch, "seq": args.seq,
+                              "seed": args.seed})
         print(f"checkpoint -> {args.checkpoint}.npz")
 
 

@@ -22,10 +22,15 @@ class AdamState:
     v: Any
 
 
-jax.tree_util.register_pytree_node(
+# keyed registration so checkpoint manifests name leaves ".step"/".m"/".v"
+# instead of flattened indices (see checkpoint/checkpoint.py, docs/API.md)
+jax.tree_util.register_pytree_with_keys(
     AdamState,
-    lambda s: ((s.step, s.m, s.v), None),
+    lambda s: (((jax.tree_util.GetAttrKey("step"), s.step),
+                (jax.tree_util.GetAttrKey("m"), s.m),
+                (jax.tree_util.GetAttrKey("v"), s.v)), None),
     lambda _, c: AdamState(*c),
+    flatten_func=lambda s: ((s.step, s.m, s.v), None),
 )
 
 

@@ -1,0 +1,25 @@
+"""Tier-1 smoke test for the quickstart example: a 3-round TrainSession run
+end-to-end (tiny MLP, CPU) so facade regressions — constructor signature,
+engine auto-selection, train/evaluate/adaptive — fail fast in CI."""
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from examples import quickstart  # noqa: E402
+
+
+def test_quickstart_three_rounds():
+    session = quickstart.main(rounds=3, log_every=0)
+    assert session.engine_name == "fused"           # auto picked the widest
+    assert session.round == 3
+    assert [m.round for m in session.history] == [0, 1, 2]
+    assert all(np.isfinite([m.client_loss, m.server_loss])
+               .all() for m in session.history)
+
+
+def test_quickstart_reference_engine_override():
+    session = quickstart.main(rounds=2, engine="reference", log_every=0)
+    assert session.engine_name == "reference"
+    assert session.round == 2

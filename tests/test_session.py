@@ -1,0 +1,364 @@
+"""The unified TrainSession API: SplitModel protocol conformance, the
+engine registry and auto-selection, full-test-set evaluation (tail batch
+included), and the checkpoint/resume-equivalence guarantee across engines
+(docs/API.md)."""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (SplitModel, TrainSession, assert_split_model,
+                       available_engines)
+from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
+from repro.core.losses import softmax_entropy
+from repro.core.splitee import MLPSplitModel, ResNetSplitModel
+from repro.models.resnet import ResNetConfig
+
+TOL = 1e-5
+
+
+def _blob_data(n, d, classes, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(classes, d)) * 2.0
+    y = rng.integers(0, classes, n).astype(np.int32)
+    x = (centers[y] + rng.normal(size=(n, d))).astype(np.float32)
+    return x, y
+
+
+def _mlp_session(engine="auto", strategy="averaging", splits=(1, 2, 2, 3),
+                 aggregate_every=1, n=600):
+    x, y = _blob_data(n, 16, 3)
+    k = len(splits)
+    model = MLPSplitModel(in_dim=16, hidden=32, num_classes=3, num_layers=4,
+                          seed=0)
+    parts = [(x[i::k], y[i::k]) for i in range(k)]
+    sess = TrainSession.from_config(
+        model,
+        SplitEEConfig(profile=HeteroProfile(tuple(splits)), strategy=strategy,
+                      aggregate_every=aggregate_every),
+        OptimizerConfig(lr=3e-3, total_steps=50),
+        parts, batch_size=64, engine=engine)
+    return sess, model, parts, (x, y)
+
+
+def _assert_states_close(a, b, atol=TOL, msg=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for u, v in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(u), np.asarray(v), atol=atol,
+                                   err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# SplitModel protocol conformance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("make_model", [
+    lambda: MLPSplitModel(in_dim=8, hidden=16, num_classes=3, num_layers=4),
+    lambda: ResNetSplitModel(ResNetConfig(num_classes=3, width_mult=0.125,
+                                          image_size=16)),
+], ids=["mlp", "resnet"])
+def test_adapters_conform_to_split_model(make_model):
+    model = make_model()
+    assert isinstance(model, SplitModel)
+    assert_split_model(model)                       # no raise
+    # both adapters expose the SAME depth attribute
+    assert isinstance(model.num_layers, int) and model.num_layers >= 4
+    assert not hasattr(model, "num_layers_")        # dead alias removed
+    # structural contract: client holds layers 1..li + exit head, server
+    # holds li+1..L + head, keyed for Eq. (1) aggregation
+    li = 2
+    client, server = model.make_client(li), model.make_server(li)
+    assert set(client) == {"trainable", "state"}
+    assert set(client["trainable"]) == {"layers", "out"}
+    assert set(client["trainable"]["layers"]) == {f"layer{k}"
+                                                  for k in range(1, li + 1)}
+    expected = {f"layer{k}" for k in range(li + 1, model.num_layers + 1)}
+    assert set(server["trainable"]) == expected | {"head"}
+
+
+def test_non_conforming_model_rejected():
+    class NotASplitModel:
+        num_layers = 4
+    with pytest.raises(TypeError, match="SplitModel"):
+        assert_split_model(NotASplitModel())
+    x, y = _blob_data(60, 8, 3)
+    with pytest.raises(TypeError, match="SplitModel"):
+        TrainSession.from_config(
+            NotASplitModel(),
+            SplitEEConfig(profile=HeteroProfile((2,))),
+            OptimizerConfig(), [(x, y)], batch_size=32)
+
+
+# ---------------------------------------------------------------------------
+# engine registry + auto-selection
+# ---------------------------------------------------------------------------
+
+
+def test_registry_lists_engines():
+    assert {"reference", "fused", "spmd"} <= set(available_engines())
+
+
+def test_auto_selects_fused_for_averaging():
+    sess, *_ = _mlp_session(engine="auto", strategy="averaging")
+    assert sess.engine_name == "fused"
+
+
+def test_auto_falls_back_to_reference_for_sequential():
+    """Sequential is ordered across clients: auto must degrade to the
+    reference engine instead of raising the way engine="fused" does."""
+    sess, *_ = _mlp_session(engine="auto", strategy="sequential")
+    assert sess.engine_name == "reference"
+    with pytest.raises(ValueError, match="[Ss]equential"):
+        _mlp_session(engine="fused", strategy="sequential")
+
+
+def test_auto_falls_back_to_reference_for_ragged_cohorts():
+    x, y = _blob_data(200, 16, 3)
+    model = MLPSplitModel(in_dim=16, hidden=32, num_classes=3, num_layers=4)
+    parts = [(x[:100], y[:100]), (x[100:140], y[100:140])]   # 100 vs 40
+    cfg = SplitEEConfig(profile=HeteroProfile((2, 2)), strategy="averaging")
+    sess = TrainSession.from_config(model, cfg, OptimizerConfig(), parts,
+                                    batch_size=64, engine="auto")
+    assert sess.engine_name == "reference"
+    with pytest.raises(ValueError, match="batch"):
+        TrainSession.from_config(model, cfg, OptimizerConfig(), parts,
+                                 batch_size=64, engine="fused")
+
+
+def test_unknown_engine_raises():
+    with pytest.raises(ValueError, match="unknown engine"):
+        _mlp_session(engine="warp")
+
+
+def test_spmd_engine_reserved():
+    with pytest.raises(ValueError, match="spmd.*reserved|reserved"):
+        _mlp_session(engine="spmd")
+
+
+# ---------------------------------------------------------------------------
+# evaluation covers the full test set (tail-batch regression)
+# ---------------------------------------------------------------------------
+
+
+def _manual_eval(model, state, sidx, i, li, x, y, tau):
+    """Oracle: single full-batch forward in plain numpy over ALL samples."""
+    client, server = state.clients[i], state.servers[sidx]
+    h, clog, _ = model.client_forward(client["trainable"], client["state"],
+                                      x, train=False)
+    slog, _ = model.server_forward(server["trainable"], server["state"], h,
+                                   li, train=False)
+    cpred = np.asarray(clog).argmax(-1)
+    spred = np.asarray(slog).argmax(-1)
+    H = np.asarray(softmax_entropy(clog))
+    apred = np.where(H < tau, cpred, spred)
+    return (float((cpred == y).mean()), float((spred == y).mean()),
+            float((apred == y).mean()), float((H < tau).mean()))
+
+
+@pytest.mark.parametrize("engine", ["reference", "fused"])
+def test_evaluate_scores_tail_batch(engine):
+    """len(x) % batch_size != 0: the old loop silently dropped up to
+    batch_size-1 trailing samples; evaluation must now score every sample
+    (checked against a full-batch numpy oracle)."""
+    sess, model, _, (x, y) = _mlp_session(engine=engine)
+    sess.train(3)
+    xt, yt = x[:130], y[:130]                       # 130 = 2*64 + 2 tail
+    assert len(xt) % 64 != 0
+    ev = sess.evaluate(xt, yt, batch_size=64)
+    ad = sess.evaluate_adaptive(xt, yt, tau=0.5, batch_size=64)
+    for i, li in enumerate(sess.ctx.profile.split_layers):
+        ca, sa, aa, ratio = _manual_eval(model, sess.state, i, i, li,
+                                         xt, yt, 0.5)
+        assert abs(ev["client_acc"][i] - ca) < 1e-6
+        assert abs(ev["server_acc"][i] - sa) < 1e-6
+        assert abs(ad["acc"][i] - aa) < 1e-6
+        assert abs(ad["client_ratio"][i] - ratio) < 1e-6
+
+
+def test_legacy_trainer_evaluate_scores_tail_batch():
+    """The HeteroTrainer shim inherits the fix."""
+    from repro.core.strategies import HeteroTrainer
+    x, y = _blob_data(600, 16, 3)
+    model = MLPSplitModel(in_dim=16, hidden=32, num_classes=3, num_layers=4,
+                          seed=0)
+    parts = [(x[i::3], y[i::3]) for i in range(3)]
+    tr = HeteroTrainer(model,
+                       SplitEEConfig(profile=HeteroProfile((1, 2, 3))),
+                       OptimizerConfig(lr=3e-3, total_steps=50),
+                       parts, batch_size=64)
+    tr.run(2)
+    # a 600-sample set at batch_size=512 used to score only 512 samples
+    ev_512 = tr.evaluate(x, y, batch_size=512)
+    ev_600 = tr.evaluate(x, y, batch_size=600)      # single exact batch
+    np.testing.assert_allclose(ev_512["client_acc"], ev_600["client_acc"],
+                               atol=1e-6)
+    np.testing.assert_allclose(ev_512["server_acc"], ev_600["server_acc"],
+                               atol=1e-6)
+
+
+def test_evaluate_smaller_than_batch():
+    sess, model, _, (x, y) = _mlp_session()
+    sess.train(1)
+    ev = sess.evaluate(x[:7], y[:7], batch_size=512)
+    assert all(0.0 <= a <= 1.0 for a in ev["client_acc"] + ev["server_acc"])
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_save_restore_roundtrips_full_state(tmp_path):
+    """Every leaf of the TrainState (params, Adam moments, round counter,
+    iterator cursors) survives save/restore bit-exactly, along with the
+    metric history."""
+    sess, model, parts, _ = _mlp_session(engine="fused")
+    sess.train(3, local_epochs=2)
+    path = os.path.join(tmp_path, "ckpt")
+    sess.save(path)
+
+    back = TrainSession.restore(path, model, parts)
+    assert back.engine_name == "fused"
+    assert back.round == 3
+    assert int(np.asarray(back.state.batches_drawn)[0]) == 6
+    _assert_states_close(back.state, sess.state, atol=0.0)
+    assert [dataclasses.astuple(m) for m in back.history] == \
+           [dataclasses.astuple(m) for m in sess.history]
+
+
+@pytest.mark.parametrize("engine", ["reference", "fused"])
+def test_resume_equivalence(engine, tmp_path):
+    """train 2k rounds == train k, save, restore, train k — on params, Adam
+    moments, per-round metrics, and subsequent data order.  The save point
+    (after round 3, aggregate_every=2) straddles an Eq. (1) aggregation
+    boundary: round 3 aggregates, round 4 must not."""
+    k, agg = 2, 2
+    full, model, parts, _ = _mlp_session(engine=engine, aggregate_every=agg)
+    full.train(2 * k, local_epochs=2)
+
+    half, _, _, _ = _mlp_session(engine=engine, aggregate_every=agg)
+    half.train(k, local_epochs=2)
+    path = os.path.join(tmp_path, "ckpt")
+    half.save(path)
+    resumed = TrainSession.restore(path, model, parts)
+    resumed.train(k, local_epochs=2)
+
+    assert resumed.round == full.round == 2 * k
+    _assert_states_close(resumed.state, full.state, msg=f"{engine} resume")
+    assert len(resumed.history) == len(full.history)
+    for a, b in zip(resumed.history, full.history):
+        assert a.round == b.round
+        assert abs(a.client_loss - b.client_loss) < TOL
+        assert abs(a.server_loss - b.server_loss) < TOL
+
+
+def test_resume_straddles_aggregation_boundary(tmp_path):
+    """Save after an odd number of rounds with aggregate_every=2 so the
+    restore lands between boundaries; the resumed run must aggregate at
+    exactly the rounds the uninterrupted run does."""
+    full, model, parts, _ = _mlp_session(engine="fused", aggregate_every=2)
+    full.train(4)
+
+    half, _, _, _ = _mlp_session(engine="fused", aggregate_every=2)
+    half.train(3)                                   # boundary hit at t=1, 3
+    path = os.path.join(tmp_path, "ckpt")
+    half.save(path)
+    resumed = TrainSession.restore(path, model, parts)
+    resumed.train(1)                                # t=3 aggregates on resume
+
+    _assert_states_close(resumed.state, full.state)
+    # t=3 really aggregated: deepest common layers identical across servers
+    for key in ("layer4", "head"):
+        w0 = np.asarray(resumed.state.servers[0]["trainable"][key]["w"])
+        for s in resumed.state.servers[1:]:
+            np.testing.assert_allclose(
+                w0, np.asarray(s["trainable"][key]["w"]), atol=1e-6)
+
+
+@pytest.mark.parametrize("first,second", [("fused", "reference"),
+                                          ("reference", "fused")])
+def test_cross_engine_restore(first, second, tmp_path):
+    """A state produced by one engine restores into the other and continues
+    the same trajectory (both engines run numerically identical math)."""
+    oracle, model, parts, _ = _mlp_session(engine="reference")
+    oracle.train(4)
+
+    half, _, _, _ = _mlp_session(engine=first)
+    half.train(2)
+    path = os.path.join(tmp_path, "ckpt")
+    half.save(path)
+    resumed = TrainSession.restore(path, model, parts, engine=second)
+    assert resumed.engine_name == second
+    resumed.train(2)
+
+    _assert_states_close(resumed.state, oracle.state,
+                         msg=f"{first}->{second}")
+    for a, b in zip(resumed.history, oracle.history):
+        assert abs(a.client_loss - b.client_loss) < TOL
+        assert abs(a.server_loss - b.server_loss) < TOL
+
+
+def test_restore_rejects_augment_mismatch(tmp_path):
+    """The augment callable is not serializable, but whether one was active
+    is part of the data-replay contract: restoring without it would resume
+    on a silently different stream."""
+    x, y = _blob_data(120, 16, 3)
+    model = MLPSplitModel(in_dim=16, hidden=32, num_classes=3, num_layers=4)
+    parts = [(x, y)]
+    aug = lambda rng, bx: bx + rng.normal(size=bx.shape).astype(bx.dtype)
+    sess = TrainSession.from_config(
+        model, SplitEEConfig(profile=HeteroProfile((2,))),
+        OptimizerConfig(total_steps=10), parts, batch_size=32,
+        augment=aug)
+    sess.train(1)
+    path = os.path.join(tmp_path, "ckpt")
+    sess.save(path)
+    with pytest.raises(ValueError, match="augment"):
+        TrainSession.restore(path, model, parts)           # augment dropped
+    back = TrainSession.restore(path, model, parts, augment=aug)
+    back.train(1)                                          # replays cleanly
+    assert back.round == 2
+
+
+def test_restore_rejects_non_session_checkpoint(tmp_path):
+    from repro.checkpoint import save_pytree
+    path = os.path.join(tmp_path, "raw")
+    save_pytree(path, {"params": np.zeros(3)}, metadata={"arch": "x"})
+    model = MLPSplitModel(in_dim=8, hidden=16, num_classes=3, num_layers=4)
+    with pytest.raises(ValueError, match="not a TrainSession"):
+        TrainSession.restore(path, model, [])
+
+
+def test_resnet_state_roundtrip_includes_bn(tmp_path):
+    """ResNet cohorts carry BatchNorm running statistics in the non-trainable
+    state; they must ride through save/restore and keep the resumed
+    trajectory on the uninterrupted one."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(96, 16, 16, 3)).astype(np.float32)
+    y = rng.integers(0, 3, 96).astype(np.int32)
+    parts = [(x[0::2], y[0::2]), (x[1::2], y[1::2])]
+    model = ResNetSplitModel(ResNetConfig(num_classes=3, width_mult=0.125,
+                                          image_size=16), seed=0)
+    cfg = SplitEEConfig(profile=HeteroProfile((3, 4)), strategy="averaging")
+    opt = OptimizerConfig(lr=1e-3, total_steps=10)
+
+    full = TrainSession.from_config(model, cfg, opt, parts, batch_size=32,
+                                    engine="reference")
+    full.train(2)
+
+    half = TrainSession.from_config(model, cfg, opt, parts, batch_size=32,
+                                    engine="reference")
+    half.train(1)
+    # BN state moved away from init and is part of the saved tree
+    bn_before = jax.tree.leaves(half.state.clients[0]["state"])
+    assert bn_before, "ResNet client must carry BN state"
+    path = os.path.join(tmp_path, "ckpt")
+    half.save(path)
+    resumed = TrainSession.restore(path, model, parts)
+    _assert_states_close(resumed.state, half.state, atol=0.0)
+    resumed.train(1)
+    _assert_states_close(resumed.state, full.state)

@@ -84,6 +84,21 @@ def test_participation_counts():
     assert ns == [0, 1, 3, 4]
 
 
+def test_participation_boundary():
+    """C_l over 0-indexed layers is {i : l_i <= l}: a client whose cut sits
+    exactly at the queried layer participates (its server-side model starts
+    at layer l_i), one layer earlier it does not."""
+    p = HeteroProfile((2, 3))
+    assert p.participation(1) == ()
+    assert p.participation(2) == (0,)       # l_i == layer -> server-side
+    assert p.participation(3) == (0, 1)
+    assert p.participation(5) == (0, 1)
+    # consistent with the aggregation-count oracle at every layer
+    for layer in range(4):
+        _, ns = participation_counts([2, 3], num_layers=4)
+        assert len(p.participation(layer)) == ns[layer]
+
+
 # ---------------------------------------------------------------------------
 # strategies (Alg. 1 / Alg. 2 structure)
 # ---------------------------------------------------------------------------
