@@ -1,17 +1,29 @@
-"""Fused vs. reference engine throughput (rounds/sec) on the Averaging
-strategy — the headline metric for the scan+vmap engine (docs/ENGINES.md).
+"""Engine throughput (rounds/sec) on the Averaging strategy: the
+paper-faithful reference loop vs the scan+vmap fused engine vs the
+mesh-sharded spmd engine — all behind ``repro.api.TrainSession`` on the
+same N-client MLP split workload and identical data.
 
-Both engines run behind ``repro.api.TrainSession`` (``engine="reference"``
-vs ``engine="fused"``) on the same N-client MLP split workload and
-identical data; the reference engine pays two jit dispatches plus a
-``float(loss)`` host sync per client per minibatch, the fused engine runs
-the whole chunk as one compiled scan.  Emits ``BENCH_fused.json`` with the
-schema validated by ``tests/test_bench_smoke.py``.
+The reference engine pays two jit dispatches plus a ``float(loss)`` host
+sync per client per minibatch; the fused engine runs the whole chunk as
+one compiled scan; the spmd engine runs the same scan with the global
+batch sharded over the mesh's ``data`` axis.  Emits:
+
+  * ``BENCH_fused.json`` — the two-way comparison (schema validated by
+    ``tests/test_bench_smoke.py``, unchanged);
+  * ``BENCH_spmd.json``  — the three-way comparison.  The spmd leg records
+    the session's ``engine_name`` selection note, and degrades to
+    ``{"skipped": <reason>}`` when no multi-device mesh is available, so
+    the manifest always records the real execution path.
 
   PYTHONPATH=src python -m benchmarks.fused_vs_reference
-  PYTHONPATH=src python -m benchmarks.fused_vs_reference --rounds 200
+  PYTHONPATH=src python -m benchmarks.fused_vs_reference --spmd-devices 4
 """
 from __future__ import annotations
+
+# must precede the first jax import: fake CPU devices for the spmd leg
+from repro.launch.hostdevices import force_host_devices
+
+force_host_devices("--spmd-devices")
 
 import argparse
 import json
@@ -27,6 +39,8 @@ from repro.data.pipeline import ClientPartitioner
 
 SCHEMA_KEYS = ("benchmark", "config", "reference", "fused", "speedup",
                "max_metric_delta")
+SPMD_SCHEMA_KEYS = ("benchmark", "config", "reference", "fused", "spmd",
+                    "speedup", "max_metric_delta")
 
 
 def _make_session(engine: str, splits: Sequence[int], parts, *,
@@ -41,10 +55,18 @@ def _make_session(engine: str, splits: Sequence[int], parts, *,
         parts, batch_size=batch_size, engine=engine)
 
 
+def _metric_delta(ref: TrainSession, other: TrainSession) -> float:
+    return float(max(
+        max(abs(a.client_loss - b.client_loss),
+            abs(a.server_loss - b.server_loss))
+        for a, b in zip(ref.history, other.history)))
+
+
 def run(rounds: int = 60, clients: int = 4, batch_size: int = 64,
-        local_epochs: int = 1, out: str = "BENCH_fused.json") -> List[Dict]:
-    """Time both engines over ``rounds`` post-warmup rounds and write the
-    comparison JSON.  Returns benchmark rows for benchmarks/run.py."""
+        local_epochs: int = 1, out: str = "BENCH_fused.json",
+        spmd_out: str = "BENCH_spmd.json") -> List[Dict]:
+    """Time every engine over ``rounds`` post-warmup rounds and write both
+    comparison JSONs.  Returns benchmark rows for benchmarks/run.py."""
     if rounds < 1 or clients < 1:
         raise ValueError(f"need rounds >= 1 and clients >= 1, "
                          f"got rounds={rounds} clients={clients}")
@@ -57,41 +79,80 @@ def run(rounds: int = 60, clients: int = 4, batch_size: int = 64,
     parts = ClientPartitioner(clients, seed=0).split(x, y)
     total_steps = 4 * rounds * local_epochs + 16
 
-    def time_engine(engine, **run_kw):
-        sess = _make_session(engine, splits, parts, batch_size=batch_size,
-                             total_steps=total_steps)
+    def time_engine(sess, **run_kw):
         sess.train(rounds, local_epochs, **run_kw)         # warmup + compile
         t0 = time.perf_counter()
         sess.train(rounds, local_epochs, **run_kw)
         wall = time.perf_counter() - t0
         return sess, wall
 
-    ref_tr, ref_wall = time_engine("reference")
-    fus_tr, fus_wall = time_engine("fused", chunk_rounds=rounds)
+    def make(engine):
+        return _make_session(engine, splits, parts, batch_size=batch_size,
+                             total_steps=total_steps)
+
+    ref_tr, ref_wall = time_engine(make("reference"))
+    fus_tr, fus_wall = time_engine(make("fused"), chunk_rounds=rounds)
+    # only construction may skip the leg (supports() rejections: no mesh /
+    # one device); a ValueError raised while *training* must propagate
+    try:
+        spmd_sess = make("spmd")
+    except ValueError as e:
+        spmd_tr, spmd_wall = None, None
+        spmd_skip = str(e)
+    else:
+        spmd_tr, spmd_wall = time_engine(spmd_sess, chunk_rounds=rounds)
 
     # engines consumed identical data: timed-window metrics must agree
-    deltas = [max(abs(a.client_loss - b.client_loss),
-                  abs(a.server_loss - b.server_loss))
-              for a, b in zip(ref_tr.history, fus_tr.history)]
     result = {
         "benchmark": "fused_vs_reference",
         "config": {"clients": clients, "splits": splits, "rounds": rounds,
                    "local_epochs": local_epochs, "batch_size": batch_size,
                    "strategy": "averaging", "model": "mlp-4x64"},
         "reference": {"wall_s": ref_wall,
-                      "rounds_per_sec": rounds / ref_wall},
-        "fused": {"wall_s": fus_wall, "rounds_per_sec": rounds / fus_wall},
+                      "rounds_per_sec": rounds / ref_wall,
+                      "engine_path": ref_tr.engine_name},
+        "fused": {"wall_s": fus_wall, "rounds_per_sec": rounds / fus_wall,
+                  "engine_path": fus_tr.engine_name},
         "speedup": ref_wall / fus_wall,
-        "max_metric_delta": float(max(deltas)),
+        "max_metric_delta": _metric_delta(ref_tr, fus_tr),
     }
     if out:
         with open(out, "w") as f:
             json.dump(result, f, indent=1)
 
-    return [{"name": f"fused_vs_reference/{eng}/N{clients}",
+    import jax
+    spmd_result = dict(result)
+    spmd_result["benchmark"] = "spmd_vs_fused_vs_reference"
+    spmd_result["config"] = dict(result["config"],
+                                 devices=len(jax.devices()))
+    if spmd_tr is not None:
+        spmd_result["spmd"] = {"wall_s": spmd_wall,
+                               "rounds_per_sec": rounds / spmd_wall,
+                               "engine_path": spmd_tr.engine_name}
+        spmd_result["speedup"] = {"fused": ref_wall / fus_wall,
+                                  "spmd": ref_wall / spmd_wall}
+        spmd_result["max_metric_delta"] = {
+            "fused": _metric_delta(ref_tr, fus_tr),
+            "spmd": _metric_delta(ref_tr, spmd_tr)}
+    else:
+        spmd_result["spmd"] = {"skipped": spmd_skip}
+        spmd_result["speedup"] = {"fused": ref_wall / fus_wall, "spmd": None}
+        spmd_result["max_metric_delta"] = {
+            "fused": _metric_delta(ref_tr, fus_tr), "spmd": None}
+    if spmd_out:
+        with open(spmd_out, "w") as f:
+            json.dump(spmd_result, f, indent=1)
+
+    rows = [{"name": f"fused_vs_reference/{eng}/N{clients}",
              "us_per_call": result[eng]["wall_s"] / rounds * 1e6,
              "derived": f"{result[eng]['rounds_per_sec']:.1f} rounds/s",
              **result} for eng in ("reference", "fused")]
+    if spmd_tr is not None:
+        rows.append({"name": f"fused_vs_reference/spmd/N{clients}",
+                     "us_per_call": spmd_wall / rounds * 1e6,
+                     "derived": f"{rounds / spmd_wall:.1f} rounds/s",
+                     **spmd_result})
+    return rows
 
 
 def main() -> None:
@@ -100,14 +161,27 @@ def main() -> None:
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--local-epochs", type=int, default=1)
     ap.add_argument("--out", default="BENCH_fused.json")
+    ap.add_argument("--spmd-out", default="BENCH_spmd.json")
+    ap.add_argument("--spmd-devices", type=int, default=0,
+                    help="force N fake CPU devices so the spmd leg runs on "
+                         "a single-device host (consumed pre-import)")
     args = ap.parse_args()
     rows = run(rounds=args.rounds, clients=args.clients,
-               local_epochs=args.local_epochs, out=args.out)
+               local_epochs=args.local_epochs, out=args.out,
+               spmd_out=args.spmd_out)
     r = rows[0]
     print(f"reference: {r['reference']['rounds_per_sec']:.1f} rounds/s")
     print(f"fused    : {r['fused']['rounds_per_sec']:.1f} rounds/s")
     print(f"speedup  : {r['speedup']:.1f}x   "
           f"(max metric delta {r['max_metric_delta']:.2e})  -> {args.out}")
+    s = rows[-1]
+    if s["name"].endswith(f"spmd/N{args.clients}"):
+        print(f"spmd     : {s['spmd']['rounds_per_sec']:.1f} rounds/s "
+              f"on {s['config']['devices']} devices "
+              f"(delta vs reference "
+              f"{s['max_metric_delta']['spmd']:.2e})  -> {args.spmd_out}")
+    else:
+        print(f"spmd     : skipped -> {args.spmd_out}")
 
 
 if __name__ == "__main__":

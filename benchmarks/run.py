@@ -65,6 +65,7 @@ def main() -> None:
         from benchmarks import fused_vs_reference
         rows = fused_vs_reference.run(
             out=os.path.join(args.artifacts, "BENCH_fused.json"),
+            spmd_out=os.path.join(args.artifacts, "BENCH_spmd.json"),
             **(dict(rounds=8) if args.quick else dict()))
         all_rows += rows
         _emit(rows, csv_rows)

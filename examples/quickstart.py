@@ -6,7 +6,8 @@ then serve with the entropy-gated early exit (Alg. 3).
 
 Training goes through ``repro.api.TrainSession`` — the one front door over
 the engine registry (docs/API.md).  ``engine="auto"`` picks the widest
-valid backend: the fused scan+vmap engine here (docs/ENGINES.md), the
+valid backend: the mesh-sharded spmd engine on a multi-device host, the
+fused scan+vmap engine on this single-device demo (docs/ENGINES.md), the
 paper-faithful reference engine for e.g. the Sequential strategy.  Pass
 ``engine="reference"`` to force the round-by-round oracle — both produce
 the same numbers.  ``session.save(path)`` / ``TrainSession.restore(path,

@@ -4,11 +4,11 @@
 
     session = TrainSession.from_config(model, splitee_cfg, opt_cfg,
                                        client_data, batch_size=64)
-    session.train(rounds=100)
-    session.save("ckpt/run1")
+    session.train(rounds=100, save_every=20, save_dir="ckpt/run1")
 
-See docs/API.md.  The legacy ``HeteroTrainer``/``FusedHeteroTrainer``
-classes in ``repro.core`` are deprecation shims over this facade.
+See docs/API.md.  Three registered engines — ``"reference"``, ``"fused"``,
+``"spmd"`` — all pure ``TrainState -> TrainState`` executors behind this
+facade; ``engine="auto"`` picks the widest one the session supports.
 """
 from repro.api.engines import (AUTO_ORDER, Engine, SessionContext,  # noqa: F401
                                available_engines, get_engine,
@@ -19,3 +19,4 @@ from repro.api.session import CHECKPOINT_FORMAT, TrainSession  # noqa: F401
 from repro.api.state import TrainState, init_train_state  # noqa: F401
 from repro.api.fused_engine import FusedEngine  # noqa: F401
 from repro.api.reference_engine import ReferenceEngine  # noqa: F401
+from repro.api.spmd_engine import SpmdEngine  # noqa: F401

@@ -12,13 +12,18 @@ Registered engines:
     supports every strategy including Sequential (Alg. 1).
   * ``"fused"``     — scan+vmap whole-chunk execution for Averaging /
     distributed (docs/ENGINES.md).
-  * ``"spmd"``      — reserved for the mesh-sharded cohort engine built on
-    core/spmd.py; not yet wired into ``TrainSession``.
+  * ``"spmd"``      — the fused round body staged under jit with mesh
+    shardings: the global batch shards over the mesh's batch axes
+    (``repro.api.spmd_engine``, built on the core/spmd.py cohort step).
+    Needs a mesh (``TrainSession(..., mesh=...)``) or >1 visible device.
 
 ``resolve_engine("auto", ctx)`` picks the widest valid engine for the
-session's strategy and data layout (fused when it applies, else reference)
-instead of failing at runtime; naming an engine explicitly validates it at
-construction and raises with the precise reason if it cannot run.
+session's strategy, data layout, and device topology (spmd on a mesh,
+fused on one device, reference otherwise) instead of failing at runtime,
+and reports *why* candidates were skipped (surfaced by
+``TrainSession.engine_name`` so benchmark manifests record the real
+execution path); naming an engine explicitly validates it at construction
+and raises with the precise reason if it cannot run.
 """
 from __future__ import annotations
 
@@ -86,7 +91,11 @@ class SessionContext:
     def __init__(self, model, splitee_cfg: SplitEEConfig,
                  opt_cfg: OptimizerConfig,
                  client_data: Sequence[Tuple[np.ndarray, np.ndarray]],
-                 batch_size: int, *, augment=None, seed: int = 0):
+                 batch_size: int, *, augment=None, seed: int = 0,
+                 mesh=None, grad_mode: str = "eq1"):
+        if grad_mode not in ("eq1", "sum"):
+            raise ValueError(f"unknown grad_mode {grad_mode!r}; expected "
+                             f"'eq1' or 'sum'")
         self.model = model
         self.cfg = splitee_cfg
         self.opt_cfg = opt_cfg
@@ -94,6 +103,8 @@ class SessionContext:
         self.batch_size = batch_size
         self.augment = augment
         self.seed = seed
+        self.mesh = mesh
+        self.grad_mode = grad_mode
 
         self.profile = splitee_cfg.profile
         self.strategy = splitee_cfg.strategy
@@ -140,8 +151,9 @@ class Engine:
 
 _REGISTRY: Dict[str, Type[Engine]] = {}
 
-#: auto-selection preference: widest engine first
-AUTO_ORDER = ("fused", "reference")
+#: auto-selection preference: widest engine first (spmd wants a mesh or >1
+#: device; fused wants averaging/distributed; reference takes everything)
+AUTO_ORDER = ("spmd", "fused", "reference")
 
 
 def register_engine(name: str) -> Callable[[Type[Engine]], Type[Engine]]:
@@ -164,41 +176,42 @@ def available_engines() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
-def resolve_engine(name: str, ctx: SessionContext) -> Type[Engine]:
+def resolve_engine(name: str, ctx: SessionContext
+                   ) -> Tuple[Type[Engine], Optional[str]]:
     """Resolve an engine name (or ``"auto"``) against a session context.
 
-    ``"auto"`` returns the first engine in :data:`AUTO_ORDER` whose
-    ``supports`` accepts the context — e.g. Sequential-strategy sessions
-    fall back to the reference engine instead of raising the way an explicit
-    ``engine="fused"`` request does."""
+    Returns ``(engine_cls, selection_note)``.  ``"auto"`` picks the first
+    engine in :data:`AUTO_ORDER` whose ``supports`` accepts the context —
+    e.g. a single-device averaging session falls back from spmd to fused,
+    and Sequential-strategy sessions fall back to the reference engine
+    instead of raising the way an explicit ``engine="fused"`` request does.
+    When auto-selection skipped wider candidates, ``selection_note`` says
+    why (e.g. ``"spmd unavailable: ... only 1 device visible"``) so the
+    real execution path is auditable (``TrainSession.engine_name``);
+    explicit requests resolve with ``selection_note=None`` or raise."""
     if name == "auto":
-        reasons = []
+        skipped: List[Tuple[List[str], str]] = []
         for cand in AUTO_ORDER:
             cls = _REGISTRY[cand]
             reason = cls.supports(ctx)
             if reason is None:
-                return cls
-            reasons.append(f"{cand}: {reason}")
-        raise ValueError("no registered engine supports this session "
-                         f"({'; '.join(reasons)})")
+                # engines sharing a reason (e.g. spmd+fused on Sequential)
+                # collapse into one entry so the note stays readable
+                note = "; ".join(f"{'/'.join(names)} unavailable: {r}"
+                                 for names, r in skipped) or None
+                return cls, note
+            if skipped and skipped[-1][1] == reason:
+                skipped[-1][0].append(cand)
+            else:
+                skipped.append(([cand], reason))
+        raise ValueError("no registered engine supports this session ("
+                         + "; ".join(f"{'/'.join(names)}: {r}"
+                                     for names, r in skipped) + ")")
     cls = get_engine(name)
     reason = cls.supports(ctx)
     if reason:
         raise ValueError(reason)
-    return cls
-
-
-@register_engine("spmd")
-class SpmdEngine(Engine):
-    """Reserved: mesh-sharded cohort execution (cohorts spread over the
-    ``data`` mesh axis via core/spmd.py).  Registered so the name is claimed
-    and discoverable; selecting it explains where the machinery lives."""
-
-    @classmethod
-    def supports(cls, ctx: SessionContext) -> Optional[str]:
-        return ("engine 'spmd' is reserved for the mesh-sharded cohort "
-                "engine (core/spmd.py, launch/train.py) and is not yet "
-                "wired into TrainSession — use 'fused' or 'reference'")
+    return cls, None
 
 
 def cohort_layout(split_layers: Sequence[int]

@@ -1,7 +1,7 @@
 """Jitted, batched evaluation over a ``TrainState``.
 
 Replaces the old per-batch ``float()`` host-sync loops in
-``HeteroTrainer.evaluate``/``evaluate_adaptive``: the test set is padded to
+the pre-facade ``evaluate``/``evaluate_adaptive``: the test set is padded to
 whole batches with a validity mask (so the tail batch is *scored*, not
 dropped), per-batch sums accumulate inside one ``lax.scan`` per client, and
 the host sees a single 5-vector per client.

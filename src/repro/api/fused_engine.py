@@ -12,12 +12,19 @@
   * **In-graph Eq. (1)** — ``stacked_cross_layer_aggregate`` under a
     ``lax.cond`` on the traced ``(t+1) % aggregate_every == 0`` predicate.
 
-Numerically equivalent to the reference engine (both compose the same
-``make_client_step``/``make_server_step`` builders); enforced by
+Numerically equivalent to the reference engine in ``eq1`` grad mode (both
+compose the same client/server step math through
+``core.spmd.make_cohort_train_step``); enforced by
 ``tests/test_fused_engine.py`` and ``tests/test_session.py``.  The
 Sequential strategy (Alg. 1) is inherently ordered across clients and is
 not supported — ``resolve_engine("auto", ...)`` falls back to the
 reference engine for it.
+
+``repro.api.spmd_engine.SpmdEngine`` subclasses this engine and overrides
+the :meth:`FusedEngine._compile_chunk` (jit with mesh shardings),
+:meth:`FusedEngine._put_batch` (host batch -> sharded device placement)
+and :meth:`FusedEngine._stack_carry` (replicated carry) hooks to stage
+the identical round body with mesh shardings.
 """
 from __future__ import annotations
 
@@ -32,8 +39,8 @@ from repro.api.engines import (Engine, SessionContext, cohort_layout,
 from repro.api.state import TrainState
 from repro.core.aggregation import stacked_cross_layer_aggregate
 from repro.core.splitee import stack_pytrees, unstack_pytrees
-from repro.core.strategies import (RoundMetrics, make_client_step,
-                                   make_server_step)
+from repro.core.spmd import make_cohort_train_step
+from repro.core.strategies import RoundMetrics
 from repro.data.pipeline import prestage_batches
 
 
@@ -51,28 +58,24 @@ class FusedEngine(Engine):
     @classmethod
     def supports(cls, ctx: SessionContext):
         if ctx.strategy not in ("averaging", "distributed"):
-            return (f"fused engine supports averaging/distributed, not "
-                    f"{ctx.strategy!r}; the Sequential strategy is ordered "
-                    f"across clients — use the reference engine")
+            return (f"supports averaging/distributed only, not "
+                    f"{ctx.strategy!r} (the Sequential strategy is ordered "
+                    f"across clients — use the reference engine)")
         return ragged_cohort_reason(ctx)
 
     # -------------------------------------------------------------- tracing
     def _vstep(self, li: int) -> Callable:
-        """One cohort step: the shared client+server step builders composed
-        exactly as the reference engine's round body, vmapped over lanes."""
-        cstep = make_client_step(self.ctx.model, self.ctx.opt_cfg)
-        sstep = make_server_step(self.ctx.model, self.ctx.opt_cfg, li)
-
-        def combined(client, copt, server, sopt, x, y, lr, lr_s):
-            tr, st, copt, h, closs = cstep(client["trainable"],
-                                           client["state"], copt, x, y, lr)
-            h = jax.lax.stop_gradient(h)      # no server->client gradient
-            srv, sst, sopt, sloss = sstep(server["trainable"],
-                                          server["state"], sopt, h, y, lr_s)
-            return ({"trainable": tr, "state": st}, copt,
-                    {"trainable": srv, "state": sst}, sopt, closs, sloss)
-
+        """One cohort step: the shared ``core.spmd.make_cohort_train_step``
+        (eq1: exactly the reference engine's round body; sum: one fused
+        backward of the summed loss), vmapped over lanes."""
+        combined = make_cohort_train_step(self.ctx.model, self.ctx.opt_cfg,
+                                          li, self.ctx.grad_mode)
         return jax.vmap(combined, in_axes=(0, 0, 0, 0, 0, 0, None, None))
+
+    def _compile_chunk(self, chunk: Callable) -> Callable:
+        """Stage the traced chunk.  The spmd subclass overrides this with
+        mesh in/out shardings; here it is a plain donated jit."""
+        return jax.jit(chunk, donate_argnums=(0,))
 
     def _chunk_fn(self, local_epochs: int) -> Callable:
         """Jitted ``(carry, ts, xs, ys) -> (carry, (closs[n], sloss[n]))``
@@ -131,11 +134,16 @@ class FusedEngine(Engine):
         def chunk(carry, ts, xs, ys):
             return jax.lax.scan(round_body, carry, (ts, xs, ys))
 
-        fn = jax.jit(chunk, donate_argnums=(0,))
+        fn = self._compile_chunk(chunk)
         self._chunk_fns[local_epochs] = fn
         return fn
 
     # ------------------------------------------------------------- staging
+    def _put_batch(self, arr: np.ndarray) -> jnp.ndarray:
+        """Host-staged batch -> device.  The spmd subclass overrides this
+        to place each device's slice directly into the batch sharding."""
+        return jnp.asarray(arr)
+
     def _stage_chunk(self, rounds: int, local_epochs: int):
         """Draw the chunk's minibatches through the session's data cursor
         (the same sequence the reference engine would consume) and stack
@@ -149,10 +157,10 @@ class FusedEngine(Engine):
         xs, ys = {}, {}
         for li in self._cohort_lis:
             lanes = self._lanes[li]
-            xs[li] = jnp.asarray(np.stack([per_client[i][0] for i in lanes],
-                                          axis=2))
-            ys[li] = jnp.asarray(np.stack([per_client[i][1] for i in lanes],
-                                          axis=2))
+            xs[li] = self._put_batch(np.stack([per_client[i][0]
+                                               for i in lanes], axis=2))
+            ys[li] = self._put_batch(np.stack([per_client[i][1]
+                                               for i in lanes], axis=2))
         return xs, ys
 
     def _stack_carry(self, clients, copts, servers, sopts):

@@ -40,6 +40,10 @@ class ReferenceEngine(Engine):
     def supports(cls, ctx: SessionContext):
         if ctx.strategy not in ("sequential", "averaging", "distributed"):
             return f"unknown strategy {ctx.strategy!r}"
+        if ctx.grad_mode != "eq1":
+            return (f"the reference engine implements the paper-faithful "
+                    f"'eq1' gradient routing only, not {ctx.grad_mode!r} — "
+                    f"use the fused or spmd engine for 'sum'")
         return None
 
     # ------------------------------------------------------------------ jit

@@ -13,10 +13,9 @@ on parameters, Adam moments, BN statistics, and per-round metrics
     session = TrainSession.from_config(model, splitee_cfg, opt_cfg,
                                        client_data, batch_size=64,
                                        engine="auto")
-    session.train(rounds=100)
-    session.save("ckpt/run1")
+    session.train(rounds=100, save_every=20, save_dir="ckpt/run1")
     ...
-    session = TrainSession.restore("ckpt/run1", model, client_data)
+    session = TrainSession.restore_latest("ckpt/run1", model, client_data)
     session.train(rounds=100)            # continues round 100..199
     session.evaluate(x_test, y_test)
 
@@ -25,7 +24,10 @@ See docs/API.md for the full lifecycle and the checkpoint layout.
 from __future__ import annotations
 
 import dataclasses
+import glob as _glob
 import json
+import os
+import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -33,6 +35,7 @@ import numpy as np
 
 from repro.api import fused_engine as _fused_engine      # noqa: F401 (registers)
 from repro.api import reference_engine as _reference_engine  # noqa: F401
+from repro.api import spmd_engine as _spmd_engine        # noqa: F401
 from repro.api.engines import SessionContext, resolve_engine
 from repro.api.evaluation import SplitEvaluator
 from repro.api.protocol import assert_split_model
@@ -53,12 +56,15 @@ class TrainSession:
                  client_data: Sequence[Tuple[np.ndarray, np.ndarray]],
                  batch_size: int, *, engine: str = "auto",
                  augment=None, seed: int = 0,
+                 mesh=None, grad_mode: str = "eq1",
                  state: Optional[TrainState] = None,
                  history: Optional[List[RoundMetrics]] = None):
         assert_split_model(model)
         self.ctx = SessionContext(model, splitee_cfg, opt_cfg, client_data,
-                                  batch_size, augment=augment, seed=seed)
-        self.engine = resolve_engine(engine, self.ctx)(self.ctx)
+                                  batch_size, augment=augment, seed=seed,
+                                  mesh=mesh, grad_mode=grad_mode)
+        engine_cls, self._engine_note = resolve_engine(engine, self.ctx)
+        self.engine = engine_cls(self.ctx)
         self.state = (state if state is not None
                       else init_train_state(model, splitee_cfg, opt_cfg))
         self.history: List[RoundMetrics] = list(history or [])
@@ -70,11 +76,16 @@ class TrainSession:
                     opt_cfg: OptimizerConfig,
                     data: Sequence[Tuple[np.ndarray, np.ndarray]],
                     batch_size: int = 64, *, engine: str = "auto",
-                    augment=None, seed: int = 0) -> "TrainSession":
+                    augment=None, seed: int = 0,
+                    mesh=None, grad_mode: str = "eq1") -> "TrainSession":
         """The canonical constructor (same arguments as ``__init__``; named
-        for symmetry with ``restore``)."""
+        for symmetry with ``restore``).  ``mesh`` selects the device mesh
+        for the spmd engine (and makes it eligible under ``engine="auto"``);
+        ``grad_mode`` is ``"eq1"`` (paper-faithful) or ``"sum"`` (single
+        fused backward; averaging engines only)."""
         return cls(model, splitee_cfg, opt_cfg, data, batch_size,
-                   engine=engine, augment=augment, seed=seed)
+                   engine=engine, augment=augment, seed=seed, mesh=mesh,
+                   grad_mode=grad_mode)
 
     # ---------------------------------------------------------- properties
     @property
@@ -88,13 +99,46 @@ class TrainSession:
 
     @property
     def engine_name(self) -> str:
+        """The selected engine, annotated with *why* wider candidates were
+        skipped when ``engine="auto"`` resolved the choice — e.g.
+        ``"fused (spmd unavailable: ... only 1 device visible)"`` — so
+        benchmark manifests and logs record the real execution path.  Use
+        ``session.engine.name`` for the bare registry name."""
+        if self._engine_note:
+            return f"{self.engine.name} ({self._engine_note})"
         return self.engine.name
 
     # ------------------------------------------------------------ training
     def train(self, rounds: int, local_epochs: int = 1, log_every: int = 0,
-              chunk_rounds: int = 0) -> List[RoundMetrics]:
+              chunk_rounds: int = 0, *, save_every: int = 0,
+              save_dir: Optional[str] = None,
+              keep_last: int = 3) -> List[RoundMetrics]:
         """Advance the state by ``rounds`` rounds; returns the new rounds'
-        metrics (also appended to ``self.history``)."""
+        metrics (also appended to ``self.history``).
+
+        ``save_every=N`` checkpoints into ``save_dir`` every N rounds (and
+        once more at the end when ``rounds`` is not a multiple), rotating
+        so only the newest ``keep_last`` checkpoints remain on disk; pick
+        the run back up with :meth:`restore_latest`."""
+        if save_every < 0 or (save_every and not save_dir):
+            raise ValueError("save_every needs save_dir (and save_every "
+                             f">= 0); got save_every={save_every} "
+                             f"save_dir={save_dir!r}")
+        if not save_every:
+            return self._train_segment(rounds, local_epochs, log_every,
+                                       chunk_rounds)
+        metrics: List[RoundMetrics] = []
+        done = 0
+        while done < rounds:
+            n = min(save_every, rounds - done)
+            metrics.extend(self._train_segment(n, local_epochs, log_every,
+                                               chunk_rounds))
+            done += n
+            self._save_rotating(save_dir, keep_last)
+        return metrics
+
+    def _train_segment(self, rounds, local_epochs, log_every, chunk_rounds
+                       ) -> List[RoundMetrics]:
         self.state, metrics = self.engine.run(
             self.state, rounds, local_epochs=local_epochs,
             log_every=log_every, chunk_rounds=chunk_rounds)
@@ -104,7 +148,7 @@ class TrainSession:
     def run(self, rounds: int, local_epochs: int = 1, log_every: int = 0,
             chunk_rounds: int = 0) -> List[RoundMetrics]:
         """Back-compat alias for :meth:`train` returning the full history
-        (the old ``HeteroTrainer.run`` contract)."""
+        (the pre-facade trainer ``run`` contract)."""
         self.train(rounds, local_epochs, log_every, chunk_rounds)
         return self.history
 
@@ -137,6 +181,7 @@ class TrainSession:
                 "entropy_threshold": self.ctx.cfg.entropy_threshold,
             },
             "optimizer": opt,
+            "grad_mode": self.ctx.grad_mode,
             "batch_size": self.ctx.batch_size,
             "seed": self.ctx.seed,
             # the augment callable itself is not serializable, but whether
@@ -147,17 +192,64 @@ class TrainSession:
         }
         save_pytree(path, self.state, metadata=meta)
 
+    def _save_rotating(self, save_dir: str, keep_last: int) -> None:
+        """``save_dir/ckpt-<round>`` plus keep-last-``keep_last`` rotation
+        (oldest ``.npz``/``.json`` pairs beyond the budget are removed)."""
+        os.makedirs(save_dir, exist_ok=True)
+        self.save(os.path.join(save_dir, f"ckpt-{self.round:08d}"))
+        stems = sorted(p[:-5] for p in
+                       _glob.glob(os.path.join(save_dir, "ckpt-*.json")))
+        for stem in stems[:-max(1, keep_last)]:
+            for ext in (".npz", ".json"):
+                try:
+                    os.remove(stem + ext)
+                except FileNotFoundError:
+                    pass
+
+    @classmethod
+    def restore_latest(cls, save_dir: str, model,
+                       client_data: Sequence[Tuple[np.ndarray, np.ndarray]],
+                       *, engine: Optional[str] = None, augment=None,
+                       mesh=None) -> "TrainSession":
+        """Resume from the newest *readable* checkpoint under ``save_dir``
+        (the layout :meth:`train`'s ``save_every`` writes).  Checkpoints
+        are tried newest-first; a truncated or unreadable pair (a crash
+        mid-save) is skipped with a warning.  Only read/parse failures are
+        skipped — a checkpoint that loads but cannot build a session (bad
+        engine for this host, config mismatch) raises, so configuration
+        errors are never misreported as corruption."""
+        stems = sorted((p[:-5] for p in
+                        _glob.glob(os.path.join(save_dir, "ckpt-*.json"))),
+                       reverse=True)
+        errors = []
+        for stem in stems:
+            try:
+                with open(stem + ".json") as f:
+                    json.load(f)
+                np.load(stem + ".npz").close()
+            except Exception as e:                        # noqa: BLE001
+                warnings.warn(f"skipping unreadable checkpoint {stem}: {e}")
+                errors.append(f"{os.path.basename(stem)}: {e}")
+                continue
+            return cls.restore(stem, model, client_data, engine=engine,
+                               augment=augment, mesh=mesh)
+        detail = f" (tried: {'; '.join(errors)})" if errors else ""
+        raise FileNotFoundError(
+            f"no readable TrainSession checkpoint under "
+            f"{save_dir!r}{detail}")
+
     @classmethod
     def restore(cls, path: str, model,
                 client_data: Sequence[Tuple[np.ndarray, np.ndarray]],
-                *, engine: Optional[str] = None, augment=None
-                ) -> "TrainSession":
+                *, engine: Optional[str] = None, augment=None,
+                mesh=None) -> "TrainSession":
         """Rebuild a session from :meth:`save` output.  Configuration comes
         from the manifest; ``model`` and ``client_data`` must be the ones
         the run was built with (the state carries every learned tensor, the
         adapter only its architecture/seed).  ``engine`` overrides the saved
         engine name — a state saved by one engine restores into any other
-        that supports the strategy."""
+        that supports the strategy.  ``mesh`` (not serializable) must be
+        re-supplied when the spmd engine should run on a specific mesh."""
         with open(path + ".json") as f:
             meta = json.load(f)["metadata"]
         if meta.get("kind") != "train_session":
@@ -184,7 +276,8 @@ class TrainSession:
         opt_cfg = OptimizerConfig(**opt)
         session = cls(model, splitee_cfg, opt_cfg, client_data,
                       meta["batch_size"], engine=engine or meta["engine"],
-                      augment=augment, seed=meta["seed"])
+                      augment=augment, seed=meta["seed"], mesh=mesh,
+                      grad_mode=meta.get("grad_mode", "eq1"))
         # fresh init has the identical pytree structure: restore into it
         session.state = load_pytree(path, session.state)
         session.history = [RoundMetrics(**m) for m in meta["history"]]

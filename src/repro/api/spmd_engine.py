@@ -1,0 +1,124 @@
+"""SPMD engine: the fused round body staged under jit with mesh shardings,
+as a pure ``TrainState -> TrainState`` executor (see docs/ENGINES.md).
+
+This is the scaling story for the Averaging/distributed strategies: the
+chunk function the fused engine scans on one device is compiled with
+explicit `jax.sharding.NamedSharding` constraints instead —
+
+  * the **global batch** (every cohort's pre-staged ``[rounds, E, k, B,
+    ...]`` minibatch tensor) shards its per-lane batch dimension ``B`` over
+    the mesh's batch axes (``("pod", "data")`` where present,
+    ``launch.mesh.batch_axes``), so each device computes the forward/backward
+    for its slice of every client's minibatch;
+  * parameters, Adam moments, and BN statistics **replicate**; XLA's SPMD
+    partitioner turns the per-minibatch gradient reductions into
+    ``all-reduce`` collectives over the batch axes, and the in-graph Eq. (1)
+    aggregation stays collective-free on the replicated carry.
+
+The math is byte-for-byte the fused engine's (the same
+``core.spmd.make_cohort_train_step`` under the same scanned round body), so
+spmd ``eq1`` is cross-checkable against the reference engine to float32
+reduction tolerance — including ``aggregate_every`` boundaries and
+checkpoint/resume hand-offs between engines (tests/test_spmd_engine.py).
+
+Meshes: pass one explicitly (``TrainSession(..., mesh=...)`` — e.g.
+``launch.mesh.make_production_mesh()``) or let the engine build the default
+data-parallel mesh over every visible device.  On a CPU container, expose
+fake devices first: ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.api.engines import SessionContext, register_engine
+from repro.api.fused_engine import FusedEngine
+from repro.data.pipeline import effective_batch_size
+from repro.launch.mesh import axis_sizes, batch_axes
+from repro.launch.shardings import to_named
+
+
+def default_data_mesh():
+    """A 1-D data-parallel mesh over every visible device (the host-CPU
+    test topology and the single-process accelerator default).  Production
+    launches pass ``launch.mesh.make_production_mesh()`` instead."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def resolve_mesh(ctx: SessionContext):
+    """The mesh this session's spmd engine runs on: the explicit
+    ``ctx.mesh`` when one was supplied, else the default data mesh."""
+    return ctx.mesh if ctx.mesh is not None else default_data_mesh()
+
+
+def data_parallelism(mesh) -> int:
+    """Total batch-axis parallelism of ``mesh`` (product of the ``pod`` and
+    ``data`` axis sizes present)."""
+    sizes = axis_sizes(mesh)
+    return int(np.prod([sizes[a] for a in batch_axes(mesh)]))
+
+
+@register_engine("spmd")
+class SpmdEngine(FusedEngine):
+    """Mesh-sharded execution of the fused scan+vmap round body."""
+
+    def __init__(self, ctx: SessionContext):
+        super().__init__(ctx)
+        self.mesh = resolve_mesh(ctx)
+        ax = batch_axes(self.mesh)
+        ax = ax if len(ax) > 1 else ax[0]
+        # one spec serves every staged leaf: [rounds, E, k, B, ...] — the
+        # per-lane batch dim shards, trailing feature dims replicate
+        self._replicated = to_named(P(), self.mesh)
+        self._batch_sharding = to_named(P(None, None, None, ax), self.mesh)
+
+    @classmethod
+    def supports(cls, ctx: SessionContext) -> Optional[str]:
+        reason = super().supports(ctx)           # strategy + ragged cohorts
+        if reason:
+            return reason
+        if ctx.mesh is None and len(jax.devices()) < 2:
+            return ("needs a mesh (TrainSession(..., mesh=...)) or >1 "
+                    "visible device (e.g. XLA_FLAGS=--xla_force_host_"
+                    "platform_device_count=4); only 1 device visible")
+        mesh = resolve_mesh(ctx)
+        dp = data_parallelism(mesh)
+        if dp < 2:
+            return (f"mesh {axis_sizes(mesh)} has no parallelism on its "
+                    f"batch axes {batch_axes(mesh)}")
+        for i, (xd, _) in enumerate(ctx.client_data):
+            eb = effective_batch_size(len(xd), ctx.batch_size)
+            if eb % dp != 0:
+                return (f"client {i}'s effective batch size {eb} does not "
+                        f"divide over the data-parallel size {dp}; adjust "
+                        f"batch_size or the mesh")
+        return None
+
+    # ------------------------------------------------------------- staging
+    def _compile_chunk(self, chunk: Callable) -> Callable:
+        """Jit the scanned round body with mesh shardings: carry (params /
+        moments / BN stats) and per-round losses replicated, the staged
+        batch tensors sharded over the batch axes.  The carry is still
+        donated, so long chunks run in place."""
+        rep, bsh = self._replicated, self._batch_sharding
+        return jax.jit(chunk,
+                       in_shardings=(rep, rep, bsh, bsh),
+                       out_shardings=(rep, rep),
+                       donate_argnums=(0,))
+
+    def _put_batch(self, arr):
+        """Host-staged batch numpy -> its batch sharding directly, so each
+        device receives only its slice (never materializing the whole
+        chunk on one device)."""
+        return jax.device_put(arr, self._batch_sharding)
+
+    def _stack_carry(self, clients, copts, servers, sopts):
+        """Replicate the stacked carry across the mesh up front (avoids an
+        implicit single-device -> replicated reshard inside the jit and
+        keeps donation effective)."""
+        carry = super()._stack_carry(clients, copts, servers, sopts)
+        return jax.device_put(carry, self._replicated)

@@ -3,10 +3,11 @@
 #                     repro.api.protocol.SplitModel adapters)
 #   losses.py       — CE / entropy / confidence
 #   aggregation.py  — Eq. (1) cross-layer aggregation
-#   strategies.py   — shared client/server step builders + HeteroTrainer shim
-#   fused.py        — FusedHeteroTrainer shim (engines live in repro.api)
-#   spmd.py         — fused SPMD production train step (masked exits + routing)
+#   strategies.py   — shared client/server step builders
+#   spmd.py         — fused SPMD production train step (masked exits +
+#                     routing) and the TrainState-boundary cohort step
+#                     shared by the fused/spmd engines
 #   inference.py    — Alg. 3 entropy-gated adaptive inference
 #
 # Training engines and the TrainSession facade live in repro.api
-# (docs/API.md); the trainer classes here are deprecation shims.
+# (docs/API.md).

@@ -14,7 +14,7 @@ Three implementations:
     production fused step (see core/spmd.py and DESIGN.md §2).
   * ``stacked_cross_layer_aggregate`` — the in-graph form over
     cohort-stacked server models, traceable inside ``lax.scan``; the fused
-    engine (core/fused.py) applies it under a ``lax.cond`` on the traced
+    engine (repro.api.fused_engine) applies it under a ``lax.cond`` on the traced
     ``aggregate_every`` boundary predicate so aggregation never forces a
     host sync.
 """
@@ -72,7 +72,7 @@ def stacked_cross_layer_aggregate(stacked: Dict[int, Dict[str, Any]],
     participation set C_l as :func:`cross_layer_aggregate` — and broadcast
     back to every member lane.  Keys held by a single client pass through
     unchanged.  Callers gate ``aggregate_every`` boundaries around this
-    (e.g. ``lax.cond`` in core/fused.py) so no host round-trip is needed.
+    (e.g. ``lax.cond`` in repro.api.fused_engine) so no host round-trip is needed.
     """
     out = {li: dict(m) for li, m in stacked.items()}
     all_keys = set()

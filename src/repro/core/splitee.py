@@ -30,7 +30,7 @@ from repro.models.common import fan_in_init, zeros
 
 
 # ---------------------------------------------------------------------------
-# Cohort stacking — shared by the fused engine (core/fused.py)
+# Cohort stacking — shared by the fused/spmd engines (repro.api)
 # ---------------------------------------------------------------------------
 
 

@@ -17,8 +17,16 @@ Two gradient modes:
     no per-layer renormalization.  Halves backward FLOPs; recorded separately
     in EXPERIMENTS.md §Perf.
 
-The step functions are pure and jit/pjit-friendly; ``launch/train.py`` and
-``launch/dryrun.py`` wrap them in ``jax.jit`` with mesh shardings.
+The step functions are pure and jit/pjit-friendly; ``launch/dryrun.py`` and
+``launch/serve.py`` wrap them in ``jax.jit`` with mesh shardings.
+
+This module also hosts the **TrainState-boundary** cohort step
+(:func:`make_cohort_train_step`): the same client/server split semantics
+expressed over the ``{"trainable", "state"}`` state dicts of the
+``repro.api`` engine contract, with the two gradient modes above.  The
+fused engine vmaps it over cohort lanes on one device; the spmd engine
+stages the identical step under a jit whose batch dimension is sharded
+over the mesh's ``data`` axis (``repro.api.spmd_engine``).
 """
 from __future__ import annotations
 
@@ -227,6 +235,79 @@ def _vjp_aux(fn, params):
         return g
 
     return (primal, aux), pull
+
+
+# ---------------------------------------------------------------------------
+# TrainState-boundary cohort step (the repro.api engine contract)
+# ---------------------------------------------------------------------------
+
+
+def make_cohort_train_step(model, opt_cfg, li: int,
+                           grad_mode: str = "eq1") -> Callable:
+    """One combined client+server step over the engine state-dict boundary:
+
+        (client, copt, server, sopt, x, y, lr, lr_s)
+            -> (client, copt, server, sopt, client_loss, server_loss)
+
+    where ``client``/``server`` are ``{"trainable": ..., "state": ...}``
+    dicts (the ``TrainState`` leaf layout, see repro/api/state.py), ``model``
+    is a :class:`repro.api.protocol.SplitModel` adapter and ``li`` the
+    cohort's cut layer.  Two gradient modes, mirroring the monolithic SPMD
+    step above:
+
+      * ``"eq1"`` — paper-faithful routing: the client family backprops its
+        exit loss, the server family backprops the final loss, as two
+        independent backward passes (exactly the composition the reference
+        engine runs, so eq1 engines are cross-checkable to tolerance).
+      * ``"sum"`` — one backward pass of the summed loss through the shared
+        forward.  The split-boundary ``stop_gradient`` decouples the two
+        parameter families, so the gradients are mathematically identical to
+        eq1 — the mode trades the second VJP for one joint pass (recorded
+        separately in benchmarks; convergence-tested, not bit-compared).
+
+    Gradients never flow from server to client: ``h`` crosses the boundary
+    through ``stop_gradient`` in both modes.
+    """
+    from repro.core.strategies import make_client_step, make_server_step
+
+    if grad_mode == "eq1":
+        cstep = make_client_step(model, opt_cfg)
+        sstep = make_server_step(model, opt_cfg, li)
+
+        def combined(client, copt, server, sopt, x, y, lr, lr_s):
+            tr, st, copt, h, closs = cstep(client["trainable"],
+                                           client["state"], copt, x, y, lr)
+            h = jax.lax.stop_gradient(h)      # no server->client gradient
+            srv, sst, sopt, sloss = sstep(server["trainable"],
+                                          server["state"], sopt, h, y, lr_s)
+            return ({"trainable": tr, "state": st}, copt,
+                    {"trainable": srv, "state": sst}, sopt, closs, sloss)
+
+        return combined
+
+    if grad_mode != "sum":
+        raise ValueError(f"unknown grad_mode {grad_mode!r}; expected "
+                         f"'eq1' or 'sum'")
+
+    def joint_loss(ctr, strv, cst, sst, x, y):
+        h, clogits, new_cst = model.client_forward(ctr, cst, x, train=True)
+        closs = softmax_cross_entropy(clogits, y)
+        h = jax.lax.stop_gradient(h)
+        slogits, new_sst = model.server_forward(strv, sst, h, li, train=True)
+        sloss = softmax_cross_entropy(slogits, y)
+        return closs + sloss, (closs, sloss, new_cst, new_sst)
+
+    def combined(client, copt, server, sopt, x, y, lr, lr_s):
+        (_, (closs, sloss, new_cst, new_sst)), (gc, gs) = jax.value_and_grad(
+            joint_loss, argnums=(0, 1), has_aux=True)(
+                client["trainable"], server["trainable"],
+                client["state"], server["state"], x, y)
+        tr, copt = adam_update(client["trainable"], gc, copt, opt_cfg, lr)
+        srv, sopt = adam_update(server["trainable"], gs, sopt, opt_cfg, lr_s)
+        return ({"trainable": tr, "state": new_cst}, copt,
+                {"trainable": srv, "state": new_sst}, sopt, closs, sloss)
+
+    return combined
 
 
 # ---------------------------------------------------------------------------

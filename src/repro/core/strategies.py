@@ -1,20 +1,18 @@
-"""Shared training-step builders + the legacy ``HeteroTrainer`` shim.
+"""Shared training-step builders for every engine.
 
-The paper-faithful per-client training loop now lives in
+The paper-faithful per-client training loop lives in
 ``repro.api.reference_engine.ReferenceEngine`` as a pure
 ``TrainState -> TrainState`` executor behind the :class:`repro.api.TrainSession`
-facade; this module keeps what both engines share:
+facade; this module keeps what all engines share:
 
   * :func:`make_client_step` / :func:`make_server_step` — pure functions of
     ``(pytrees, batch, lr)`` closed over the model/optimizer config only.
     The reference engine jits them one client at a time (the paper-faithful
-    oracle); the fused engine vmaps the same functions over stacked client
-    cohorts, so every engine runs numerically identical math.
+    oracle); the fused and spmd engines compose the same functions into the
+    cohort step (``core.spmd.make_cohort_train_step``) that runs vmapped
+    over stacked client cohorts, so every engine runs numerically identical
+    math in ``eq1`` grad mode.
   * :class:`RoundMetrics` — the per-round metric record.
-  * :class:`HeteroTrainer` — a deprecation shim with the pre-``TrainSession``
-    constructor and attribute surface (``.clients``, ``.servers``,
-    ``.history``, ...), delegating to a session on the reference engine.
-    New code should use ``repro.api.TrainSession`` directly.
 
 Gradients never flow from server to client (``h_i`` enters the server step
 as data), and every model is initialized from the same random seed via the
@@ -22,14 +20,12 @@ adapters in ``core/splitee.py`` (paper §III-B).
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Sequence, Tuple
+from typing import Callable
 
 import jax
-import numpy as np
 
-from repro.config import OptimizerConfig, SplitEEConfig
+from repro.config import OptimizerConfig
 from repro.core.losses import softmax_cross_entropy
 from repro.optim import adam_update
 
@@ -81,105 +77,3 @@ def make_server_step(model, opt_cfg: OptimizerConfig, li: int) -> Callable:
         return trainable, new_state, opt, loss
 
     return step
-
-
-# ---------------------------------------------------------------------------
-# Legacy trainer shim
-# ---------------------------------------------------------------------------
-
-
-class HeteroTrainer:
-    """Deprecated: thin shim over ``repro.api.TrainSession`` pinned to the
-    ``"reference"`` engine.  Exposes the historical mutable-attribute surface
-    as read-only views of the session's ``TrainState``."""
-
-    _ENGINE = "reference"
-
-    def __init__(self, model, splitee_cfg: SplitEEConfig,
-                 opt_cfg: OptimizerConfig,
-                 client_data: Sequence[Tuple[np.ndarray, np.ndarray]],
-                 batch_size: int, *, augment=None, seed: int = 0):
-        warnings.warn(
-            f"{type(self).__name__} is deprecated; use repro.api."
-            f"TrainSession (engine={self._ENGINE!r}) — see docs/API.md",
-            DeprecationWarning, stacklevel=2)
-        from repro.api import TrainSession
-        self.session = TrainSession(model, splitee_cfg, opt_cfg, client_data,
-                                    batch_size, engine=self._ENGINE,
-                                    augment=augment, seed=seed)
-
-    # ------------------------------------------------- legacy attribute API
-    @property
-    def model(self):
-        return self.session.ctx.model
-
-    @property
-    def cfg(self) -> SplitEEConfig:
-        return self.session.ctx.cfg
-
-    @property
-    def opt_cfg(self) -> OptimizerConfig:
-        return self.session.ctx.opt_cfg
-
-    @property
-    def profile(self):
-        return self.session.ctx.profile
-
-    @property
-    def strategy(self) -> str:
-        return self.session.ctx.strategy
-
-    @property
-    def N(self) -> int:
-        return self.session.ctx.N
-
-    @property
-    def schedule(self):
-        return self.session.ctx.schedule
-
-    @property
-    def server_lr_div(self) -> float:
-        return self.session.ctx.server_lr_div
-
-    @property
-    def history(self) -> List[RoundMetrics]:
-        return self.session.history
-
-    # tuples, not lists: the old API's in-place writes (tr.clients[0] = ...)
-    # can no longer take effect — raising beats silently dropping them
-    @property
-    def clients(self) -> Tuple[Dict[str, Any], ...]:
-        return self.session.state.clients
-
-    @property
-    def client_opts(self) -> Tuple[Any, ...]:
-        return self.session.state.client_opts
-
-    @property
-    def servers(self) -> Tuple[Dict[str, Any], ...]:
-        return self.session.state.servers
-
-    @property
-    def server_opts(self) -> Tuple[Any, ...]:
-        return self.session.state.server_opts
-
-    @property
-    def _round(self) -> int:
-        return self.session.round
-
-    # ------------------------------------------------------------ training
-    def train_round(self, local_epochs: int = 1) -> RoundMetrics:
-        return self.session.train(1, local_epochs)[-1]
-
-    def run(self, rounds: int, local_epochs: int = 1, log_every: int = 0,
-            **kw) -> List[RoundMetrics]:
-        return self.session.run(rounds, local_epochs, log_every, **kw)
-
-    # ---------------------------------------------------------------- eval
-    def evaluate(self, x: np.ndarray, y: np.ndarray, batch_size: int = 512
-                 ) -> Dict[str, Any]:
-        return self.session.evaluate(x, y, batch_size)
-
-    def evaluate_adaptive(self, x: np.ndarray, y: np.ndarray, tau: float,
-                          batch_size: int = 512) -> Dict[str, Any]:
-        return self.session.evaluate_adaptive(x, y, tau, batch_size)

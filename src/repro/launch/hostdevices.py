@@ -1,0 +1,36 @@
+"""Pre-``import jax`` helper: force fake host-CPU devices from an argv flag.
+
+jax locks the device count at first initialization, so CLIs that offer a
+``--host-devices N``-style flag must translate it into
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* anything
+imports jax.  This module is import-safe for that purpose: it touches only
+``os``/``sys``.  Both ``--flag N`` and ``--flag=N`` forms are accepted (a
+flag with no value is left for argparse to reject).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def force_host_devices(flag: str, argv=None) -> int:
+    """Scan ``argv`` (default ``sys.argv``) for ``flag``; when it requests
+    more than one device, append the XLA force-host-device-count flag to
+    ``XLA_FLAGS``.  Returns the requested count (0 if absent/unparsable)."""
+    argv = sys.argv if argv is None else argv
+    n = 0
+    for i, a in enumerate(argv):
+        try:
+            if a == flag and i + 1 < len(argv):
+                n = int(argv[i + 1])
+                break
+            if a.startswith(flag + "="):
+                n = int(a.split("=", 1)[1])
+                break
+        except ValueError:
+            return 0                    # malformed; argparse will complain
+    if n > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}")
+    return n

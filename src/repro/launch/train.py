@@ -1,156 +1,252 @@
-"""Training driver: fused SPMD Hetero-SplitEE training of any registered
-architecture on a jax mesh.
+"""Training driver: THE training entry point of the repo, built on
+``repro.api.TrainSession`` with the mesh-sharded ``"spmd"`` engine.
 
-Two scales, same code path:
-  * host demo (this container): ``--mesh host --host-shape 1,1`` over CPU
-    devices, smoke-size configs, synthetic LM data — actually executes.
-  * production: ``--mesh single|multi`` builds the 256/512-chip mesh (on the
-    real cluster this runs; here it is exercised by dryrun.py which shares
-    ``build_step_and_args``).
+Every scale runs the same code path:
+  * host demo (this container): ``--host-devices 4`` forces fake CPU
+    devices before jax initializes, the engine builds the default data
+    mesh over them, and the global batch shards across the ``data`` axis —
+    actually executes, and is cross-checked against the reference engine
+    by tests/test_spmd_engine.py.
+  * production: ``--mesh single|multi`` builds the 256/512-chip mesh from
+    ``launch.mesh.make_production_mesh`` and hands it to the session
+    (``TrainSession(..., mesh=...)``).
+  * one device, no mesh: ``--engine auto`` degrades to the fused engine
+    and says why (the ``engine_name`` selection note).
 
-Example:
-  PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --smoke \
-      --steps 20 --batch 8 --seq 64
+Checkpointing is the session's periodic-save policy: ``--save-every N``
+rotates ``ckpt-<round>`` pairs under ``--checkpoint-dir`` (keep-last-k),
+and ``--resume`` picks the run back up from the newest valid checkpoint
+via ``TrainSession.restore_latest``.
+
+Example (4 fake host devices, spmd engine, resumable):
+  PYTHONPATH=src python -m repro.launch.train --model mlp --clients 4 \
+      --rounds 20 --host-devices 4 --checkpoint-dir /tmp/run \
+      --save-every 5 --resume
 """
 from __future__ import annotations
 
+import glob
+import os
+
+# must run before jax initializes: fake host devices for the spmd engine
+from repro.launch.hostdevices import force_host_devices
+
+force_host_devices("--host-devices")
+
 import argparse
 import json
-import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import configs as configs_mod
-from repro.checkpoint import load_pytree, save_pytree
-from repro.config import (HeteroProfile, OptimizerConfig, SplitEEConfig,
-                          TrainConfig)
-from repro.core.spmd import StepConfig, boundary_ids_for_batch, make_train_step
-from repro.data.synthetic import SyntheticLMDataset
-from repro.models.backbone import init_backbone
-from repro.optim import adam_init
+from repro.api import TrainSession
+from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
+from repro.core.splitee import MLPSplitModel, ResNetSplitModel
+from repro.data.pipeline import ClientPartitioner
+from repro.data.synthetic import SyntheticImageDataset
 from repro.launch.mesh import make_production_mesh
+from repro.models.resnet import ResNetConfig
+
+#: default hetero cut layers per model family (paper Table I spirit:
+#: clients split shallow/mid/deep)
+DEFAULT_SPLITS = {"mlp": (1, 2, 3), "resnet": (3, 4, 5)}
+
+#: CLI knobs that shape the regenerated dataset / model / session; a resumed
+#: run must match every one of them or it would silently replay a different
+#: data stream (driver.json sidecar next to the checkpoints)
+DATA_KNOBS = ("model", "clients", "splits", "strategy", "aggregate_every",
+              "batch", "grad_mode", "seed", "train_size", "test_size")
+
+
+def driver_knobs(args, splits) -> dict:
+    d = {k: getattr(args, k) for k in DATA_KNOBS if k != "splits"}
+    d["splits"] = list(splits)
+    return d
+
+
+def check_driver_sidecar(ckpt_dir: str, args, splits) -> None:
+    """Fail loudly when a resumed run regenerates its data/model from
+    different knobs than the saved one (the session manifest cannot see
+    dataset-shaping flags like --train-size — the sidecar can)."""
+    path = os.path.join(ckpt_dir, "driver.json")
+    if not os.path.exists(path):
+        return                      # checkpoints written by library code
+    with open(path) as f:
+        saved = json.load(f)
+    now = driver_knobs(args, splits)
+    for k in DATA_KNOBS:
+        if k in saved and saved[k] != now[k]:
+            raise SystemExit(
+                f"--resume mismatch: checkpoint dir was written with "
+                f"--{k.replace('_', '-')}={saved[k]!r} but this run has "
+                f"{now[k]!r}")
+
+
+def build_model_and_data(args):
+    """(SplitModel adapter, train shards, held-out (x, y))."""
+    if args.model == "mlp":
+        rng = np.random.default_rng(args.seed)
+        classes, d = 5, 32
+        centers = rng.normal(size=(classes, d)) * 2.0
+        y = rng.integers(0, classes, args.train_size + args.test_size)
+        y = y.astype(np.int32)
+        x = (centers[y] + rng.normal(size=(len(y), d))).astype(np.float32)
+        xt, yt = x[args.train_size:], y[args.train_size:]
+        x, y = x[:args.train_size], y[:args.train_size]
+        model = MLPSplitModel(in_dim=d, hidden=64, num_classes=classes,
+                              num_layers=6, seed=args.seed)
+    else:
+        ds = SyntheticImageDataset(num_classes=10,
+                                   train_size=args.train_size,
+                                   test_size=args.test_size,
+                                   image_size=16, noise=2.0, seed=args.seed)
+        x, y = ds.train
+        xt, yt = ds.test
+        model = ResNetSplitModel(ResNetConfig(num_classes=10,
+                                              width_mult=0.125,
+                                              image_size=16), seed=args.seed)
+    parts = ClientPartitioner(args.clients, seed=args.seed).split(x, y)
+    return model, parts, (xt, yt)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="glm4-9b")
-    ap.add_argument("--smoke", action="store_true",
-                    help="use the reduced same-family config")
-    ap.add_argument("--steps", type=int, default=50)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=64)
-    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--model", default="mlp", choices=["mlp", "resnet"])
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--splits", default="",
+                    help="comma-separated cut layer per client (default: "
+                         "cycle the model family's depths)")
+    ap.add_argument("--strategy", default="averaging",
+                    choices=["averaging", "distributed", "sequential"])
+    ap.add_argument("--aggregate-every", type=int, default=1)
+    ap.add_argument("--rounds", type=int, default=20,
+                    help="total rounds the run should reach (a resumed run "
+                         "trains only the remainder)")
+    ap.add_argument("--local-epochs", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "spmd", "fused", "reference"])
     ap.add_argument("--grad-mode", default="eq1", choices=["eq1", "sum"])
-    ap.add_argument("--remat", default="none", choices=["none", "full"])
-    ap.add_argument("--mesh", default="host", choices=["host", "single", "multi"])
-    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--mesh", default="auto",
+                    choices=["auto", "single", "multi"],
+                    help="auto: engine default over visible devices; "
+                         "single/multi: the production TPU mesh")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N fake CPU devices (consumed pre-import)")
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--save-every", type=int, default=0)
+    ap.add_argument("--keep-last", type=int, default=3)
     ap.add_argument("--resume", action="store_true",
-                    help="continue from --checkpoint if it exists (restores "
-                         "params, Adam moments and the step counter, and "
-                         "skips the already-consumed data batches)")
+                    help="continue from the newest valid checkpoint in "
+                         "--checkpoint-dir (restores params, Adam moments, "
+                         "the round counter, and the data cursors)")
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--train-size", type=int, default=4096)
+    ap.add_argument("--test-size", type=int, default=1024)
+    ap.add_argument("--tau", type=float, default=0.5,
+                    help="entropy threshold for the adaptive eval")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    mod = configs_mod.get(args.arch)
-    cfg = mod.smoke() if args.smoke else mod.config()
-    # hetero profile over this config's exit layers (paper: 12 clients, 4 per
-    # depth); smoke configs may expose fewer exits.
-    exits = cfg.exit_layers
-    splits = tuple(np.repeat(exits, max(1, 12 // len(exits))))
-    profile = HeteroProfile(split_layers=splits)
+    model, parts, (xt, yt) = build_model_and_data(args)
+    splits = (tuple(int(s) for s in args.splits.split(","))
+              if args.splits else
+              tuple(DEFAULT_SPLITS[args.model][i % 3]
+                    for i in range(args.clients)))
+    if len(splits) != args.clients:
+        raise SystemExit(f"--splits names {len(splits)} clients but "
+                         f"--clients is {args.clients}")
+    mesh = (make_production_mesh(multi_pod=args.mesh == "multi")
+            if args.mesh != "auto" else None)
 
-    sc = StepConfig(
-        model=cfg,
-        splitee=SplitEEConfig(profile=profile),
-        train=TrainConfig(
-            batch_size=args.batch, seq_len=args.seq, remat=args.remat,
-            optimizer=OptimizerConfig(lr=args.lr, total_steps=args.steps,
-                                      warmup_steps=0)),
-        grad_mode=args.grad_mode)
+    splitee_cfg = SplitEEConfig(profile=HeteroProfile(splits),
+                                strategy=args.strategy,
+                                aggregate_every=args.aggregate_every,
+                                entropy_threshold=args.tau)
+    opt_cfg = OptimizerConfig(
+        lr=args.lr, warmup_steps=0,
+        total_steps=max(args.rounds * args.local_epochs, 1) + 16)
 
-    rng = jax.random.PRNGKey(args.seed)
-    params = init_backbone(rng, cfg)
-    n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"arch={cfg.name}  params={n_params/1e6:.1f}M  "
-          f"devices={len(jax.devices())}  profile={profile.split_layers}")
-
-    opt_state = adam_init(params, sc.train.optimizer)
-    start_step = 0
-    if args.resume and args.checkpoint and os.path.exists(
-            args.checkpoint + ".npz"):
-        with open(args.checkpoint + ".json") as f:
-            manifest = json.load(f)
-        saved_keys = manifest["keys"]
-        saved_meta = manifest.get("metadata", {})
-        # the resumed data stream is regenerated from (seed, batch, seq):
-        # a mismatch would silently replay the WRONG batches — fail loudly
-        for knob in ("arch", "batch", "seq", "seed"):
-            want, have = saved_meta.get(knob), getattr(args, knob)
-            if knob == "arch":
-                have = cfg.name
-            if want is not None and want != have:
+    resumed = False
+    if args.resume and args.checkpoint_dir and glob.glob(
+            os.path.join(args.checkpoint_dir, "ckpt-*.json")):
+        check_driver_sidecar(args.checkpoint_dir, args, splits)
+        # checkpoints exist, so --resume must resume or die — a failure
+        # here (all pairs unreadable, wrong engine for this host, ...)
+        # must never silently start a fresh run whose rotation would then
+        # delete the real checkpoints
+        try:
+            session = TrainSession.restore_latest(
+                args.checkpoint_dir, model, parts, engine=args.engine,
+                mesh=mesh)
+        except Exception as e:                            # noqa: BLE001
+            raise SystemExit(
+                f"--resume: cannot restore from {args.checkpoint_dir!r}: "
+                f"{e}") from e
+        resumed = True
+        # the restored session replays its own saved config; the CLI data
+        # stream is rebuilt from the flags, so a knob mismatch would
+        # silently train on different data — fail loudly instead
+        for knob, want, have in (
+                ("seed", session.ctx.seed, args.seed),
+                ("batch", session.ctx.batch_size, args.batch),
+                ("grad-mode", session.ctx.grad_mode, args.grad_mode),
+                ("strategy", session.ctx.strategy, args.strategy),
+                ("splits", tuple(session.ctx.profile.split_layers), splits)):
+            if want != have:
                 raise SystemExit(
                     f"--resume mismatch: checkpoint was written with "
                     f"{knob}={want!r} but this run has {knob}={have!r}")
-        if any(k.startswith("['opt']") for k in saved_keys):
-            restored = load_pytree(args.checkpoint,
-                                   {"params": params, "opt": opt_state})
-            params, opt_state = restored["params"], restored["opt"]
-            start_step = int(opt_state.step)
-            print(f"resumed {args.checkpoint}.npz at step {start_step}")
-        else:
-            # params-only checkpoint from before opt state was saved:
-            # warm-start the weights, restart schedule/moments from step 0
-            params = load_pytree(args.checkpoint, {"params": params})["params"]
-            print(f"resumed {args.checkpoint}.npz (params only — predates "
-                  f"optimizer-state checkpoints; restarting at step 0)")
-    step_fn = jax.jit(make_train_step(sc))
+    else:
+        session = TrainSession.from_config(
+            model, splitee_cfg, opt_cfg, parts, batch_size=args.batch,
+            engine=args.engine, seed=args.seed, mesh=mesh,
+            grad_mode=args.grad_mode)
 
-    data = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=args.seq,
-                              seed=args.seed)
-    split_ids = boundary_ids_for_batch(profile, cfg, args.batch)
+    print(f"model={args.model}  clients={args.clients}  splits={splits}  "
+          f"strategy={args.strategy}  grad_mode={args.grad_mode}")
+    print(f"devices={len(jax.devices())}  engine={session.engine_name}"
+          + (f"  [resumed at round {session.round}]" if resumed else ""))
 
-    t0 = time.time()
-    for step, (toks, labels) in enumerate(
-            data.batches(args.batch, args.steps)):
-        if step < start_step:
-            continue        # replay the seeded stream to the resume point
-        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels),
-                 "split_ids": split_ids}
-        if cfg.arch_type == "audio":
-            batch["enc"] = jnp.zeros(
-                (args.batch, min(args.seq, cfg.cross_source_len), 768),
-                cfg.dtype)
-        if cfg.arch_type == "vlm":
-            from repro.models import frontend as fe
-            P = min(fe.NUM_VISION_PATCHES, args.seq // 2)
-            batch["embeds"] = jnp.zeros((args.batch, P, fe.SIGLIP_PATCH_DIM),
-                                        cfg.dtype)
-            batch["labels"] = jnp.asarray(
-                np.concatenate([np.zeros((args.batch, P), np.int32), labels],
-                               axis=1))
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
-        if step % args.log_every == 0 or step == args.steps - 1:
-            m = {k: float(v) for k, v in metrics.items()}
-            dt = time.time() - t0
-            print(f"step {step:5d}  server_loss {m['server_loss']:.4f}  "
-                  f"client_losses "
-                  + " ".join(f"{v:.3f}" for k, v in sorted(m.items())
-                             if k.startswith("client_loss"))
-                  + f"  lr {m['lr']:.2e}  [{dt:.1f}s]")
+    if args.checkpoint_dir:
+        os.makedirs(args.checkpoint_dir, exist_ok=True)
+        with open(os.path.join(args.checkpoint_dir, "driver.json"),
+                  "w") as f:
+            json.dump(driver_knobs(args, splits), f, indent=1)
 
-    if args.checkpoint:
-        # opt state + step counter ride along so --resume continues the
-        # cosine schedule and Adam moments exactly where this run stopped
-        save_pytree(args.checkpoint, {"params": params, "opt": opt_state},
-                    metadata={"arch": cfg.name, "steps": args.steps,
-                              "batch": args.batch, "seq": args.seq,
-                              "seed": args.seed})
-        print(f"checkpoint -> {args.checkpoint}.npz")
+    remaining = args.rounds - session.round
+    if remaining <= 0:
+        print(f"checkpoint already at round {session.round} >= "
+              f"--rounds {args.rounds}; nothing to train")
+    else:
+        # no --save-every but a checkpoint dir: save once at completion
+        save_every = args.save_every or (remaining if args.checkpoint_dir
+                                         else 0)
+        t0 = time.time()
+        session.train(remaining, local_epochs=args.local_epochs,
+                      log_every=args.log_every,
+                      save_every=save_every,
+                      save_dir=args.checkpoint_dir or None,
+                      keep_last=args.keep_last)
+        dt = time.time() - t0
+        m = session.history[-1]
+        print(f"trained {remaining} rounds in {dt:.1f}s "
+              f"({remaining / dt:.2f} rounds/s)  "
+              f"client_loss {m.client_loss:.4f}  "
+              f"server_loss {m.server_loss:.4f}")
+        if args.checkpoint_dir:
+            print(f"checkpoints -> {args.checkpoint_dir} "
+                  f"(newest: round {session.round})")
+
+    ev = session.evaluate(xt, yt, batch_size=512)
+    ad = session.evaluate_adaptive(xt, yt, tau=args.tau, batch_size=512)
+    for i, li in enumerate(splits):
+        print(f"client {i} (l_i={li}): client_acc {ev['client_acc'][i]:.3f}  "
+              f"server_acc {ev['server_acc'][i]:.3f}  "
+              f"adaptive_acc {ad['acc'][i]:.3f} "
+              f"(client_ratio {ad['client_ratio'][i]:.2f})")
 
 
 if __name__ == "__main__":

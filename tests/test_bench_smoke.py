@@ -1,20 +1,35 @@
-"""Smoke-test the fused benchmark end-to-end at CI size: two tiny rounds per
-engine, then validate the emitted ``BENCH_fused.json`` schema so the
-benchmark can't silently rot."""
+"""Smoke-test the engine benchmark end-to-end at CI size: two tiny rounds
+per engine, then validate the emitted ``BENCH_fused.json`` and
+``BENCH_spmd.json`` schemas so the benchmark can't silently rot."""
 import json
 import os
 
+import jax
 import pytest
 
 from benchmarks import fused_vs_reference
 
 
-def test_fused_benchmark_emits_valid_json(tmp_path):
-    out = os.path.join(tmp_path, "BENCH_fused.json")
-    rows = fused_vs_reference.run(rounds=2, clients=4, batch_size=32, out=out)
+@pytest.fixture(scope="module")
+def bench_artifacts(tmp_path_factory):
+    """One tiny benchmark run shared by the schema tests."""
+    d = tmp_path_factory.mktemp("bench")
+    out = os.path.join(d, "BENCH_fused.json")
+    spmd_out = os.path.join(d, "BENCH_spmd.json")
+    rows = fused_vs_reference.run(rounds=2, clients=4, batch_size=32,
+                                  out=out, spmd_out=spmd_out)
+    return rows, out, spmd_out
 
-    # rows consumable by benchmarks/run.py's CSV emitter
-    assert len(rows) == 2
+
+def test_fused_benchmark_emits_valid_json(bench_artifacts):
+    rows, out, _ = bench_artifacts
+
+    # rows consumable by benchmarks/run.py's CSV emitter; the spmd row is
+    # present exactly when the engine supported this host (it may reject a
+    # multi-device host too, e.g. when the batch doesn't divide the mesh)
+    assert len(rows) in (2, 3)
+    if len(jax.devices()) == 1:
+        assert len(rows) == 2               # spmd needs a mesh
     for r in rows:
         assert set(("name", "us_per_call", "derived")) <= set(r)
 
@@ -31,3 +46,29 @@ def test_fused_benchmark_emits_valid_json(tmp_path):
         data["reference"]["wall_s"] / data["fused"]["wall_s"])
     # engines trained on identical minibatches: metrics must agree
     assert data["max_metric_delta"] < 1e-4
+
+
+def test_spmd_benchmark_manifest_records_execution_path(bench_artifacts):
+    """The three-way manifest must always say what actually ran: real
+    timings (with the engine_path note) on a multi-device host, or an
+    explicit skip reason on a single-device one — never a silent absence."""
+    _, _, spmd_out = bench_artifacts
+    with open(spmd_out) as f:
+        data = json.load(f)
+    assert set(fused_vs_reference.SPMD_SCHEMA_KEYS) <= set(data)
+    assert data["benchmark"] == "spmd_vs_fused_vs_reference"
+    assert data["config"]["devices"] == len(jax.devices())
+    assert data["speedup"]["fused"] > 0
+    # the leg is real-or-skip-reason, keyed on what actually ran (a
+    # multi-device host can still skip, e.g. batch not dividing the mesh)
+    if "skipped" in data["spmd"]:
+        assert data["spmd"]["skipped"]          # non-empty reason
+        assert data["speedup"]["spmd"] is None
+        if len(jax.devices()) == 1:
+            assert "device" in data["spmd"]["skipped"]
+    else:
+        assert data["spmd"]["wall_s"] > 0
+        assert data["max_metric_delta"]["spmd"] < 1e-4
+        assert data["spmd"]["engine_path"] == "spmd"
+    if len(jax.devices()) == 1:
+        assert "skipped" in data["spmd"]

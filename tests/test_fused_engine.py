@@ -5,10 +5,9 @@ import jax
 import numpy as np
 import pytest
 
+from repro.api import TrainSession
 from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
-from repro.core.fused import FusedHeteroTrainer
 from repro.core.splitee import MLPSplitModel, stack_pytrees, unstack_pytrees
-from repro.core.strategies import HeteroTrainer
 
 TOL = 1e-5
 
@@ -21,18 +20,19 @@ def _blob_data(n, d, classes, seed=0):
     return x, y
 
 
-def _make(cls, strategy, splits=(1, 2, 2, 3), aggregate_every=1):
+def _make(engine, strategy, splits=(1, 2, 2, 3), aggregate_every=1,
+          grad_mode="eq1"):
     x, y = _blob_data(600, 16, 3)
     n = len(splits)
     model = MLPSplitModel(in_dim=16, hidden=32, num_classes=3, num_layers=4,
                           seed=0)
     parts = [(x[i::n], y[i::n]) for i in range(n)]
-    tr = cls(model,
-             SplitEEConfig(profile=HeteroProfile(tuple(splits)),
-                           strategy=strategy,
-                           aggregate_every=aggregate_every),
-             OptimizerConfig(lr=3e-3, total_steps=50),
-             parts, batch_size=64)
+    tr = TrainSession.from_config(
+        model,
+        SplitEEConfig(profile=HeteroProfile(tuple(splits)),
+                      strategy=strategy, aggregate_every=aggregate_every),
+        OptimizerConfig(lr=3e-3, total_steps=50),
+        parts, batch_size=64, engine=engine, grad_mode=grad_mode)
     return tr, (x, y)
 
 
@@ -47,13 +47,15 @@ def _assert_engines_match(ref, fus):
         assert a.round == b.round
         assert abs(a.client_loss - b.client_loss) < TOL
         assert abs(a.server_loss - b.server_loss) < TOL
-    for i in range(ref.N):
-        _assert_trees_close(ref.clients[i]["trainable"],
-                            fus.clients[i]["trainable"], f"client {i}")
-        _assert_trees_close(ref.servers[i]["trainable"],
-                            fus.servers[i]["trainable"], f"server {i}")
-        _assert_trees_close((ref.client_opts[i].m, ref.client_opts[i].v),
-                            (fus.client_opts[i].m, fus.client_opts[i].v),
+    for i in range(ref.ctx.N):
+        _assert_trees_close(ref.state.clients[i]["trainable"],
+                            fus.state.clients[i]["trainable"], f"client {i}")
+        _assert_trees_close(ref.state.servers[i]["trainable"],
+                            fus.state.servers[i]["trainable"], f"server {i}")
+        _assert_trees_close((ref.state.client_opts[i].m,
+                             ref.state.client_opts[i].v),
+                            (fus.state.client_opts[i].m,
+                             fus.state.client_opts[i].v),
                             f"client opt {i}")
 
 
@@ -66,41 +68,58 @@ def _assert_engines_match(ref, fus):
 def test_fused_matches_reference(strategy):
     """≥3 rounds with E=2 local epochs: params, opt state and per-round
     metrics agree with the per-client reference to ~1e-5."""
-    ref, _ = _make(HeteroTrainer, strategy)
-    fus, _ = _make(FusedHeteroTrainer, strategy)
-    ref.run(4, local_epochs=2)
-    fus.run(4, local_epochs=2)
+    ref, _ = _make("reference", strategy)
+    fus, _ = _make("fused", strategy)
+    ref.train(4, local_epochs=2)
+    fus.train(4, local_epochs=2)
     _assert_engines_match(ref, fus)
 
 
 def test_fused_matches_reference_aggregate_every_2():
     """aggregate_every=2: rounds 0/2 skip Eq. (1), rounds 1/3 apply it — the
     in-graph masked aggregation must hit exactly the reference boundaries."""
-    ref, _ = _make(HeteroTrainer, "averaging", aggregate_every=2)
-    fus, _ = _make(FusedHeteroTrainer, "averaging", aggregate_every=2)
-    ref.run(4)
-    fus.run(4)
+    ref, _ = _make("reference", "averaging", aggregate_every=2)
+    fus, _ = _make("fused", "averaging", aggregate_every=2)
+    ref.train(4)
+    fus.train(4)
     _assert_engines_match(ref, fus)
     # boundary really aggregated: deepest common layers identical
     for key in ("layer4", "head"):
-        w0 = np.asarray(fus.servers[0]["trainable"][key]["w"])
-        for s in fus.servers[1:]:
+        w0 = np.asarray(fus.state.servers[0]["trainable"][key]["w"])
+        for s in fus.state.servers[1:]:
             np.testing.assert_allclose(w0, np.asarray(s["trainable"][key]["w"]),
                                        atol=1e-6)
 
 
 def test_fused_chunked_matches_single_chunk():
     """Chunking the scan (chunk_rounds) must not change the trajectory."""
-    one, _ = _make(FusedHeteroTrainer, "averaging", aggregate_every=2)
-    many, _ = _make(FusedHeteroTrainer, "averaging", aggregate_every=2)
-    one.run(6)
-    many.run(6, chunk_rounds=2)
+    one, _ = _make("fused", "averaging", aggregate_every=2)
+    many, _ = _make("fused", "averaging", aggregate_every=2)
+    one.train(6)
+    many.train(6, chunk_rounds=2)
     _assert_engines_match(one, many)
+
+
+def test_fused_sum_grad_mode_matches_eq1():
+    """The split-boundary stop_gradient decouples the client/server
+    parameter families, so the 'sum' mode's single fused backward computes
+    the same gradients as the two-pass 'eq1' routing on the split-net
+    adapters (the modes differ only in how the backward is staged)."""
+    eq1, _ = _make("fused", "averaging")
+    summ, _ = _make("fused", "averaging", grad_mode="sum")
+    eq1.train(3, local_epochs=2)
+    summ.train(3, local_epochs=2)
+    _assert_engines_match(eq1, summ)
+
+
+def test_reference_rejects_sum_grad_mode():
+    with pytest.raises(ValueError, match="eq1"):
+        _make("reference", "averaging", grad_mode="sum")
 
 
 def test_fused_rejects_sequential():
     with pytest.raises(ValueError, match="[Ss]equential"):
-        _make(FusedHeteroTrainer, "sequential")
+        _make("fused", "sequential")
 
 
 def test_fused_rejects_ragged_cohort_batches():
@@ -112,10 +131,11 @@ def test_fused_rejects_ragged_cohort_batches():
     parts = [(x[:100], y[:100]), (x[100:140], y[100:140])]   # 100 vs 40
     cfg = SplitEEConfig(profile=HeteroProfile((2, 2)), strategy="averaging")
     with pytest.raises(ValueError, match="batch"):
-        FusedHeteroTrainer(model, cfg, OptimizerConfig(), parts,
-                           batch_size=64)
-    HeteroTrainer(model, cfg, OptimizerConfig(), parts,
-                  batch_size=64).run(1)                      # oracle is fine
+        TrainSession.from_config(model, cfg, OptimizerConfig(), parts,
+                                 batch_size=64, engine="fused")
+    TrainSession.from_config(model, cfg, OptimizerConfig(), parts,
+                             batch_size=64,
+                             engine="reference").train(1)    # oracle is fine
 
 
 def test_stack_unstack_roundtrip():
@@ -138,25 +158,25 @@ def test_stack_unstack_roundtrip():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("cls", [HeteroTrainer, FusedHeteroTrainer])
-def test_adaptive_tau_zero_is_pure_server(cls):
+@pytest.mark.parametrize("engine", ["reference", "fused"])
+def test_adaptive_tau_zero_is_pure_server(engine):
     """tau=0: entropy H >= 0 is never < 0, so nothing exits at the client —
     accuracy must equal the server-side path."""
-    tr, (x, y) = _make(cls, "averaging")
-    tr.run(3)
+    tr, (x, y) = _make(engine, "averaging")
+    tr.train(3)
     ad = tr.evaluate_adaptive(x[:300], y[:300], tau=0.0, batch_size=100)
-    assert ad["client_ratio"] == [0.0] * tr.N
+    assert ad["client_ratio"] == [0.0] * tr.ctx.N
     ev = tr.evaluate(x[:300], y[:300], batch_size=100)
     np.testing.assert_allclose(ad["acc"], ev["server_acc"], atol=1e-6)
 
 
-@pytest.mark.parametrize("cls", [HeteroTrainer, FusedHeteroTrainer])
-def test_adaptive_tau_above_max_entropy_is_pure_client(cls):
+@pytest.mark.parametrize("engine", ["reference", "fused"])
+def test_adaptive_tau_above_max_entropy_is_pure_client(engine):
     """tau > log(num_classes) >= max H: every sample exits at the client."""
-    tr, (x, y) = _make(cls, "averaging")
-    tr.run(3)
+    tr, (x, y) = _make(engine, "averaging")
+    tr.train(3)
     tau = float(np.log(3)) + 0.1
     ad = tr.evaluate_adaptive(x[:300], y[:300], tau=tau, batch_size=100)
-    assert ad["client_ratio"] == [1.0] * tr.N
+    assert ad["client_ratio"] == [1.0] * tr.ctx.N
     ev = tr.evaluate(x[:300], y[:300], batch_size=100)
     np.testing.assert_allclose(ad["acc"], ev["client_acc"], atol=1e-6)

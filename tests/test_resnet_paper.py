@@ -8,7 +8,7 @@ import pytest
 from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
 from repro.configs import resnet18_cifar
 from repro.core.splitee import ResNetSplitModel
-from repro.core.strategies import HeteroTrainer
+from repro.api import TrainSession
 from repro.data.pipeline import ClientPartitioner
 from repro.data.synthetic import SyntheticImageDataset
 from repro.models.resnet import (ResNetConfig, init_client_head, init_resnet,
@@ -55,10 +55,11 @@ def test_resnet_hetero_training_learns():
     model = ResNetSplitModel(cfg, seed=0)
     prof = HeteroProfile((3, 4, 5))
     parts = ClientPartitioner(3, seed=0).split(*ds.train)
-    tr = HeteroTrainer(model, SplitEEConfig(profile=prof, strategy="averaging"),
-                       OptimizerConfig(lr=2e-3, total_steps=60),
-                       parts, batch_size=64)
-    tr.run(rounds=40, local_epochs=2)
+    tr = TrainSession.from_config(
+        model, SplitEEConfig(profile=prof, strategy="averaging"),
+        OptimizerConfig(lr=2e-3, total_steps=60), parts, batch_size=64,
+        engine="reference")
+    tr.train(rounds=40, local_epochs=2)
     ev = tr.evaluate(*ds.test, batch_size=256)
     # well above the 10% chance level on both sides of the split
     assert min(ev["client_acc"]) > 0.25, ev

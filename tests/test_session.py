@@ -102,8 +102,21 @@ def test_registry_lists_engines():
     assert {"reference", "fused", "spmd"} <= set(available_engines())
 
 
-def test_auto_selects_fused_for_averaging():
+def test_auto_selects_widest_engine_for_averaging():
+    """On one device auto degrades from spmd to fused, and engine_name
+    reports the skip reason so manifests record the real execution path."""
     sess, *_ = _mlp_session(engine="auto", strategy="averaging")
+    if len(jax.devices()) > 1:
+        assert sess.engine.name == "spmd"
+        assert sess.engine_name == "spmd"
+    else:
+        assert sess.engine.name == "fused"
+        assert sess.engine_name.startswith("fused (spmd unavailable:")
+        assert "device" in sess.engine_name
+
+
+def test_explicit_engine_name_carries_no_note():
+    sess, *_ = _mlp_session(engine="fused", strategy="averaging")
     assert sess.engine_name == "fused"
 
 
@@ -111,7 +124,8 @@ def test_auto_falls_back_to_reference_for_sequential():
     """Sequential is ordered across clients: auto must degrade to the
     reference engine instead of raising the way engine="fused" does."""
     sess, *_ = _mlp_session(engine="auto", strategy="sequential")
-    assert sess.engine_name == "reference"
+    assert sess.engine.name == "reference"
+    assert "unavailable" in sess.engine_name
     with pytest.raises(ValueError, match="[Ss]equential"):
         _mlp_session(engine="fused", strategy="sequential")
 
@@ -123,7 +137,7 @@ def test_auto_falls_back_to_reference_for_ragged_cohorts():
     cfg = SplitEEConfig(profile=HeteroProfile((2, 2)), strategy="averaging")
     sess = TrainSession.from_config(model, cfg, OptimizerConfig(), parts,
                                     batch_size=64, engine="auto")
-    assert sess.engine_name == "reference"
+    assert sess.engine.name == "reference"
     with pytest.raises(ValueError, match="batch"):
         TrainSession.from_config(model, cfg, OptimizerConfig(), parts,
                                  batch_size=64, engine="fused")
@@ -134,8 +148,13 @@ def test_unknown_engine_raises():
         _mlp_session(engine="warp")
 
 
-def test_spmd_engine_reserved():
-    with pytest.raises(ValueError, match="spmd.*reserved|reserved"):
+@pytest.mark.skipif(len(jax.devices()) > 1,
+                    reason="spmd is available on multi-device hosts")
+def test_spmd_requires_devices_or_mesh():
+    """Single-device host, no mesh: explicit engine="spmd" must fail with
+    the actionable reason (tests/test_spmd_engine.py covers the engine
+    itself on a forced multi-device host)."""
+    with pytest.raises(ValueError, match="device"):
         _mlp_session(engine="spmd")
 
 
@@ -179,18 +198,18 @@ def test_evaluate_scores_tail_batch(engine):
         assert abs(ad["client_ratio"][i] - ratio) < 1e-6
 
 
-def test_legacy_trainer_evaluate_scores_tail_batch():
-    """The HeteroTrainer shim inherits the fix."""
-    from repro.core.strategies import HeteroTrainer
+def test_evaluate_batch_size_invariant():
+    """Accuracy must not depend on the evaluation batch size (the old loop
+    silently dropped the tail batch)."""
     x, y = _blob_data(600, 16, 3)
     model = MLPSplitModel(in_dim=16, hidden=32, num_classes=3, num_layers=4,
                           seed=0)
     parts = [(x[i::3], y[i::3]) for i in range(3)]
-    tr = HeteroTrainer(model,
-                       SplitEEConfig(profile=HeteroProfile((1, 2, 3))),
-                       OptimizerConfig(lr=3e-3, total_steps=50),
-                       parts, batch_size=64)
-    tr.run(2)
+    tr = TrainSession.from_config(
+        model, SplitEEConfig(profile=HeteroProfile((1, 2, 3))),
+        OptimizerConfig(lr=3e-3, total_steps=50),
+        parts, batch_size=64, engine="reference")
+    tr.train(2)
     # a 600-sample set at batch_size=512 used to score only 512 samples
     ev_512 = tr.evaluate(x, y, batch_size=512)
     ev_600 = tr.evaluate(x, y, batch_size=600)      # single exact batch
@@ -228,6 +247,49 @@ def test_save_restore_roundtrips_full_state(tmp_path):
     _assert_states_close(back.state, sess.state, atol=0.0)
     assert [dataclasses.astuple(m) for m in back.history] == \
            [dataclasses.astuple(m) for m in sess.history]
+
+
+def test_save_every_rotation_and_restore_latest(tmp_path):
+    """train(save_every=2, keep_last=2) over 5 rounds checkpoints after
+    rounds 2, 4 and 5, rotates down to the newest two, and restore_latest
+    resumes from round 5 bit-exactly."""
+    sess, model, parts, _ = _mlp_session(engine="fused")
+    ckdir = os.path.join(tmp_path, "run")
+    sess.train(5, save_every=2, save_dir=ckdir, keep_last=2)
+    assert sess.round == 5
+    stems = sorted(f[:-5] for f in os.listdir(ckdir) if f.endswith(".json"))
+    assert stems == ["ckpt-00000004", "ckpt-00000005"]
+    assert sorted(f for f in os.listdir(ckdir) if f.endswith(".npz")) == \
+        ["ckpt-00000004.npz", "ckpt-00000005.npz"]
+
+    back = TrainSession.restore_latest(ckdir, model, parts)
+    assert back.round == 5
+    _assert_states_close(back.state, sess.state, atol=0.0)
+
+
+def test_restore_latest_skips_corrupt_newest(tmp_path):
+    """A checkpoint truncated mid-write must not strand the run: the newest
+    *valid* checkpoint wins, with a warning about the skipped one."""
+    sess, model, parts, _ = _mlp_session(engine="fused")
+    ckdir = os.path.join(tmp_path, "run")
+    sess.train(4, save_every=2, save_dir=ckdir, keep_last=3)
+    with open(os.path.join(ckdir, "ckpt-00000004.npz"), "wb") as f:
+        f.write(b"truncated")
+    with pytest.warns(UserWarning, match="skipping unreadable"):
+        back = TrainSession.restore_latest(ckdir, model, parts)
+    assert back.round == 2
+
+
+def test_restore_latest_empty_dir_raises(tmp_path):
+    model = MLPSplitModel(in_dim=8, hidden=16, num_classes=3, num_layers=4)
+    with pytest.raises(FileNotFoundError, match="no readable"):
+        TrainSession.restore_latest(str(tmp_path), model, [])
+
+
+def test_save_every_requires_save_dir():
+    sess, *_ = _mlp_session()
+    with pytest.raises(ValueError, match="save_dir"):
+        sess.train(2, save_every=1)
 
 
 @pytest.mark.parametrize("engine", ["reference", "fused"])

@@ -8,8 +8,8 @@ import pytest
 from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
 from repro.core.aggregation import (cross_layer_aggregate,
                                     participation_counts)
+from repro.api import TrainSession
 from repro.core.splitee import MLPSplitModel
-from repro.core.strategies import HeteroTrainer
 
 
 def _blob_data(n, d, classes, seed=0):
@@ -25,13 +25,13 @@ def _trainer(strategy, splits=(1, 2, 3), rounds=0, **kw):
     model = MLPSplitModel(in_dim=16, hidden=32, num_classes=3, num_layers=4,
                           seed=0)
     parts = [(x[i::3], y[i::3]) for i in range(3)]
-    tr = HeteroTrainer(model,
-                       SplitEEConfig(profile=HeteroProfile(splits),
-                                     strategy=strategy, **kw),
-                       OptimizerConfig(lr=3e-3, total_steps=50),
-                       parts, batch_size=64)
+    tr = TrainSession.from_config(model,
+                                  SplitEEConfig(profile=HeteroProfile(splits),
+                                                strategy=strategy, **kw),
+                                  OptimizerConfig(lr=3e-3, total_steps=50),
+                                  parts, batch_size=64, engine="reference")
     if rounds:
-        tr.run(rounds)
+        tr.train(rounds)
     return tr, (x, y)
 
 
@@ -106,34 +106,34 @@ def test_participation_boundary():
 
 def test_sequential_shares_one_server():
     tr, _ = _trainer("sequential")
-    assert len(tr.servers) == 1
-    assert tr.server_lr_div == 3.0              # lr / N (paper Table II)
+    assert len(tr.state.servers) == 1
+    assert tr.ctx.server_lr_div == 3.0              # lr / N (paper Table II)
 
 
 def test_sequential_server_steps_per_round():
     tr, _ = _trainer("sequential")
-    tr.train_round(local_epochs=2)
+    tr.train(1, local_epochs=2)
     # shared server updated N x E = 3 x 2 = 6 times
-    assert int(tr.server_opts[0].step) == 6
+    assert int(tr.state.server_opts[0].step) == 6
     # each client updated E = 2 times
-    assert all(int(o.step) == 2 for o in tr.client_opts)
+    assert all(int(o.step) == 2 for o in tr.state.client_opts)
 
 
 def test_averaging_syncs_common_layers():
     tr, _ = _trainer("averaging", rounds=2)
     # after aggregation the deepest common layer (layer4, head) is identical
     for key in ("layer4", "head"):
-        w0 = tr.servers[0]["trainable"][key]["w"]
-        for s in tr.servers[1:]:
+        w0 = tr.state.servers[0]["trainable"][key]["w"]
+        for s in tr.state.servers[1:]:
             np.testing.assert_allclose(w0, s["trainable"][key]["w"], atol=1e-6)
     # layer2 exists only in client-0's server model
-    assert "layer2" in tr.servers[0]["trainable"]
-    assert "layer2" not in tr.servers[2]["trainable"]
+    assert "layer2" in tr.state.servers[0]["trainable"]
+    assert "layer2" not in tr.state.servers[2]["trainable"]
 
 
 def test_distributed_does_not_sync():
     tr, _ = _trainer("distributed", splits=(2, 2, 2), rounds=2)
-    w = [np.asarray(s["trainable"]["head"]["w"]) for s in tr.servers]
+    w = [np.asarray(s["trainable"]["head"]["w"]) for s in tr.state.servers]
     assert not np.allclose(w[0], w[1])          # independent training drifts
 
 
