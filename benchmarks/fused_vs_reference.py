@@ -165,6 +165,10 @@ def main() -> None:
     ap.add_argument("--spmd-devices", type=int, default=0,
                     help="force N fake CPU devices so the spmd leg runs on "
                          "a single-device host (consumed pre-import)")
+    ap.add_argument("--max-delta", type=float, default=0.0,
+                    help="exit non-zero when any engine's metric delta vs "
+                         "the reference exceeds this bound (the CI "
+                         "bench-smoke gate; 0 disables)")
     args = ap.parse_args()
     rows = run(rounds=args.rounds, clients=args.clients,
                local_epochs=args.local_epochs, out=args.out,
@@ -175,13 +179,28 @@ def main() -> None:
     print(f"speedup  : {r['speedup']:.1f}x   "
           f"(max metric delta {r['max_metric_delta']:.2e})  -> {args.out}")
     s = rows[-1]
-    if s["name"].endswith(f"spmd/N{args.clients}"):
+    spmd_ran = s["name"].endswith(f"spmd/N{args.clients}")
+    if spmd_ran:
         print(f"spmd     : {s['spmd']['rounds_per_sec']:.1f} rounds/s "
               f"on {s['config']['devices']} devices "
               f"(delta vs reference "
               f"{s['max_metric_delta']['spmd']:.2e})  -> {args.spmd_out}")
     else:
         print(f"spmd     : skipped -> {args.spmd_out}")
+
+    if args.max_delta > 0:
+        deltas = {"fused": r["max_metric_delta"]}
+        if spmd_ran:
+            deltas["spmd"] = s["max_metric_delta"]["spmd"]
+        over = {k: v for k, v in deltas.items() if v > args.max_delta}
+        if over:
+            import sys
+            print(f"FAIL: metric delta vs reference exceeds "
+                  f"--max-delta {args.max_delta:g}: "
+                  + ", ".join(f"{k}={v:.3e}" for k, v in over.items()))
+            sys.exit(1)
+        print(f"delta gate ok (<= {args.max_delta:g}): "
+              + ", ".join(f"{k}={v:.3e}" for k, v in deltas.items()))
 
 
 if __name__ == "__main__":

@@ -48,6 +48,13 @@ from repro.core.strategies import RoundMetrics
 CHECKPOINT_FORMAT = 1
 
 
+def _model_name(model) -> str:
+    """Adapter identity recorded in checkpoint manifests: the adapter's
+    ``name`` (BackboneSplitModel reports its arch config name) or the
+    adapter class name for the paper-scale MLP/ResNet adapters."""
+    return str(getattr(model, "name", type(model).__name__))
+
+
 class TrainSession:
     """Facade over (model adapter, configs, data, engine, TrainState)."""
 
@@ -173,6 +180,10 @@ class TrainSession:
             "format": CHECKPOINT_FORMAT,
             "kind": "train_session",
             "engine": self.engine.name,
+            # adapter identity (e.g. BackboneSplitModel exposes the arch
+            # config name): restore refuses a different model so a state is
+            # never silently loaded into another architecture
+            "model": _model_name(self.ctx.model),
             "splitee": {
                 "split_layers": list(self.ctx.profile.split_layers),
                 "strategy": self.ctx.cfg.strategy,
@@ -258,6 +269,12 @@ class TrainSession:
             raise ValueError(
                 f"{path} has checkpoint format {meta.get('format')!r}; this "
                 f"version reads format {CHECKPOINT_FORMAT}")
+        saved_model = meta.get("model")          # absent in older manifests
+        if saved_model is not None and saved_model != _model_name(model):
+            raise ValueError(
+                f"checkpoint was saved with model {saved_model!r} but "
+                f"restore got {_model_name(model)!r}; the state cannot be "
+                f"loaded into a different architecture")
         if meta["augmented"] != (augment is not None):
             raise ValueError(
                 f"checkpoint was saved with augment "

@@ -25,9 +25,21 @@ CANONICAL = {a.replace("_", "-").replace("-1p2b", "-1.2b"): a for a in ARCH_IDS}
 
 
 def get(arch: str):
-    """Resolve an architecture id (dash or underscore form) to its module."""
+    """Resolve an architecture id (dash or underscore form) to its module.
+
+    Raises ``ValueError`` for an id that names no module — and only then:
+    a *registered* module failing to import (a broken dependency inside
+    it) propagates its real error instead of being misreported as an
+    unknown architecture."""
     name = CANONICAL.get(arch, arch).replace("-", "_").replace("1.2b", "1p2b")
-    return importlib.import_module(f"repro.configs.{name}")
+    try:
+        return importlib.import_module(f"repro.configs.{name}")
+    except ModuleNotFoundError as e:
+        if e.name == f"repro.configs.{name}":
+            raise ValueError(
+                f"{arch!r} is not a registered architecture; known: "
+                f"{', '.join(all_arch_ids())}") from None
+        raise
 
 
 def all_arch_ids():

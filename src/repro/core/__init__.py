@@ -1,6 +1,8 @@
 # Hetero-SplitEE core: the paper's contribution as composable JAX modules.
 #   splitee.py      — split specs, per-client model partitioning (the
 #                     repro.api.protocol.SplitModel adapters)
+#   backbone_splitee.py — the production configs/ backbones behind the
+#                     same SplitModel protocol (cuts at exit_layers)
 #   losses.py       — CE / entropy / confidence
 #   aggregation.py  — Eq. (1) cross-layer aggregation
 #   strategies.py   — shared client/server step builders

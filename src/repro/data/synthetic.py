@@ -13,6 +13,13 @@ accuracies; see EXPERIMENTS.md §Paper-validation.
 ``SyntheticLMDataset`` produces token streams with per-sequence affine
 next-token structure (t_{i+1} = (a*t_i + b) mod V on 90%% of steps), which a
 small transformer learns quickly — used by the end-to-end driver.
+
+``SyntheticSeqClsDataset`` is the token-domain analogue of the image task:
+each class owns a small set of signature tokens; a sequence mixes signature
+draws with uniform noise and the label is the class id (< vocab), so a
+backbone's last-position logits can be scored like an image classifier.
+It feeds ``core.backbone_splitee.BackboneSplitModel`` through the same
+``(x, y)`` per-client shard contract as the image datasets.
 """
 from __future__ import annotations
 
@@ -100,3 +107,49 @@ class SyntheticLMDataset:
                 use_noise = rng.random(batch_size) > self.structure
                 toks[:, t + 1] = np.where(use_noise, noise, nxt)
             yield toks[:, :-1].astype(np.int32), toks[:, 1:].astype(np.int32)
+
+
+@dataclass
+class SyntheticSeqClsDataset:
+    """Class-conditional token sequences for sequence classification.
+
+    Class ``c`` owns ``signature`` random vocabulary tokens; each position is
+    a signature draw with probability ``p_signal`` and uniform noise
+    otherwise.  Labels are class ids in ``[0, num_classes)`` — a strict
+    subset of the vocabulary, so V-way logits (an LM/exit head) score them
+    directly.  Difficulty is controlled by ``p_signal`` and ``num_classes``.
+    """
+
+    vocab_size: int
+    seq_len: int = 16
+    num_classes: int = 8
+    train_size: int = 512
+    test_size: int = 256
+    signature: int = 8              # signature tokens per class
+    p_signal: float = 0.5           # per-position probability of a signature
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.num_classes <= self.vocab_size
+        rng = np.random.default_rng(self.seed)
+        self.signatures = rng.integers(
+            0, self.vocab_size, size=(self.num_classes, self.signature))
+        self._train = self._make_split(rng, self.train_size)
+        self._test = self._make_split(rng, self.test_size)
+
+    def _make_split(self, rng, n) -> Tuple[np.ndarray, np.ndarray]:
+        labels = rng.integers(0, self.num_classes, size=n).astype(np.int32)
+        pick = rng.integers(0, self.signature, size=(n, self.seq_len))
+        sig = self.signatures[labels[:, None], pick]
+        noise = rng.integers(0, self.vocab_size, size=(n, self.seq_len))
+        use_sig = rng.random((n, self.seq_len)) < self.p_signal
+        toks = np.where(use_sig, sig, noise).astype(np.int32)
+        return toks, labels
+
+    @property
+    def train(self):
+        return self._train
+
+    @property
+    def test(self):
+        return self._test

@@ -18,10 +18,24 @@ rotates ``ckpt-<round>`` pairs under ``--checkpoint-dir`` (keep-last-k),
 and ``--resume`` picks the run back up from the newest valid checkpoint
 via ``TrainSession.restore_latest``.
 
+Besides the paper-scale ``--model mlp|resnet`` adapters, ``--arch <name>``
+trains any registered ``configs/`` backbone (GLM-4, DeepSeek-V3, Qwen3-MoE,
+RWKV6, Whisper, …) through the same session facade: the architecture module
+is resolved via ``repro.configs.get(name)``, ``--smoke`` picks its reduced
+``smoke()`` variant (the full ``config()`` otherwise), and the model is the
+``BackboneSplitModel`` adapter over a synthetic sequence-classification
+token stream.  Cut layers must sit at the config's ``exit_layers``
+(``--splits`` defaults to cycling them across clients).
+
 Example (4 fake host devices, spmd engine, resumable):
   PYTHONPATH=src python -m repro.launch.train --model mlp --clients 4 \
       --rounds 20 --host-devices 4 --checkpoint-dir /tmp/run \
       --save-every 5 --resume
+
+Example (GLM-4 smoke backbone, fused engine):
+  PYTHONPATH=src python -m repro.launch.train --arch glm4_9b --smoke \
+      --engine fused --clients 4 --rounds 5 --batch 16 \
+      --train-size 256 --test-size 64 --checkpoint-dir /tmp/glm4
 """
 from __future__ import annotations
 
@@ -40,11 +54,13 @@ import time
 import jax
 import numpy as np
 
+from repro import configs as configs_mod
 from repro.api import TrainSession
 from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
+from repro.core.backbone_splitee import BackboneSplitModel
 from repro.core.splitee import MLPSplitModel, ResNetSplitModel
 from repro.data.pipeline import ClientPartitioner
-from repro.data.synthetic import SyntheticImageDataset
+from repro.data.synthetic import SyntheticImageDataset, SyntheticSeqClsDataset
 from repro.launch.mesh import make_production_mesh
 from repro.models.resnet import ResNetConfig
 
@@ -54,9 +70,12 @@ DEFAULT_SPLITS = {"mlp": (1, 2, 3), "resnet": (3, 4, 5)}
 
 #: CLI knobs that shape the regenerated dataset / model / session; a resumed
 #: run must match every one of them or it would silently replay a different
-#: data stream (driver.json sidecar next to the checkpoints)
-DATA_KNOBS = ("model", "clients", "splits", "strategy", "aggregate_every",
-              "batch", "grad_mode", "seed", "train_size", "test_size")
+#: data stream — or, for ``arch``/``grad_mode``, silently continue a
+#: checkpoint into a *different network or gradient math* (driver.json
+#: sidecar next to the checkpoints)
+DATA_KNOBS = ("model", "arch", "smoke", "seq_len", "clients", "splits",
+              "strategy", "aggregate_every", "batch", "grad_mode", "seed",
+              "train_size", "test_size")
 
 
 def driver_knobs(args, splits) -> dict:
@@ -83,9 +102,31 @@ def check_driver_sidecar(ckpt_dir: str, args, splits) -> None:
                 f"{now[k]!r}")
 
 
-def build_model_and_data(args):
+def resolve_arch_config(args):
+    """The --arch run's ModelConfig (a cheap dataclass — no parameter
+    init yet), or None for the mlp/resnet families."""
+    if not args.arch:
+        return None
+    try:
+        mod = configs_mod.get(args.arch)
+    except ValueError as e:
+        raise SystemExit(f"--arch: {e}") from None
+    return mod.smoke() if args.smoke else mod.config()
+
+
+def build_model_and_data(args, arch_cfg):
     """(SplitModel adapter, train shards, held-out (x, y))."""
-    if args.model == "mlp":
+    if arch_cfg is not None:
+        cfg = arch_cfg
+        model = BackboneSplitModel(cfg, seed=args.seed)
+        ds = SyntheticSeqClsDataset(
+            vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+            num_classes=min(8, cfg.vocab_size),
+            train_size=args.train_size, test_size=args.test_size,
+            seed=args.seed)
+        x, y = ds.train
+        xt, yt = ds.test
+    elif args.model == "mlp":
         rng = np.random.default_rng(args.seed)
         classes, d = 5, 32
         centers = rng.normal(size=(classes, d)) * 2.0
@@ -113,6 +154,15 @@ def build_model_and_data(args):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="mlp", choices=["mlp", "resnet"])
+    ap.add_argument("--arch", default="",
+                    help="train a configs/ backbone (e.g. glm4_9b, "
+                         "qwen3-moe-235b-a22b) through BackboneSplitModel; "
+                         "overrides --model")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --arch: use the reduced smoke() config "
+                         "instead of the full-scale config()")
+    ap.add_argument("--seq-len", type=int, default=16,
+                    help="with --arch: synthetic token sequence length")
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--splits", default="",
                     help="comma-separated cut layer per client (default: "
@@ -150,14 +200,35 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    model, parts, (xt, yt) = build_model_and_data(args)
-    splits = (tuple(int(s) for s in args.splits.split(","))
-              if args.splits else
-              tuple(DEFAULT_SPLITS[args.model][i % 3]
-                    for i in range(args.clients)))
+    arch_cfg = resolve_arch_config(args)
+    if args.splits:
+        splits = tuple(int(s) for s in args.splits.split(","))
+    elif arch_cfg is not None:
+        cuts = tuple(sorted(arch_cfg.exit_layers))   # the valid cut layers
+        splits = tuple(cuts[i % len(cuts)] for i in range(args.clients))
+    else:
+        splits = tuple(DEFAULT_SPLITS[args.model][i % 3]
+                       for i in range(args.clients))
     if len(splits) != args.clients:
         raise SystemExit(f"--splits names {len(splits)} clients but "
                          f"--clients is {args.clients}")
+    if arch_cfg is not None:
+        bad = sorted(set(splits) - set(arch_cfg.exit_layers))
+        if bad:
+            raise SystemExit(
+                f"--splits {bad} are not exit boundaries of "
+                f"{arch_cfg.name}; valid cut layers: "
+                f"{sorted(arch_cfg.exit_layers)}")
+
+    resuming = bool(args.resume and args.checkpoint_dir and glob.glob(
+        os.path.join(args.checkpoint_dir, "ckpt-*.json")))
+    if resuming:
+        # before any (possibly full-scale) parameter init: a knob mismatch
+        # must die on the string comparison, not after materializing the
+        # model and dataset
+        check_driver_sidecar(args.checkpoint_dir, args, splits)
+
+    model, parts, (xt, yt) = build_model_and_data(args, arch_cfg)
     mesh = (make_production_mesh(multi_pod=args.mesh == "multi")
             if args.mesh != "auto" else None)
 
@@ -170,9 +241,7 @@ def main() -> None:
         total_steps=max(args.rounds * args.local_epochs, 1) + 16)
 
     resumed = False
-    if args.resume and args.checkpoint_dir and glob.glob(
-            os.path.join(args.checkpoint_dir, "ckpt-*.json")):
-        check_driver_sidecar(args.checkpoint_dir, args, splits)
+    if resuming:
         # checkpoints exist, so --resume must resume or die — a failure
         # here (all pairs unreadable, wrong engine for this host, ...)
         # must never silently start a fresh run whose rotation would then
@@ -205,7 +274,9 @@ def main() -> None:
             engine=args.engine, seed=args.seed, mesh=mesh,
             grad_mode=args.grad_mode)
 
-    print(f"model={args.model}  clients={args.clients}  splits={splits}  "
+    what = (f"arch={args.arch}{' (smoke)' if args.smoke else ''} "
+            f"[{model.name}]" if args.arch else f"model={args.model}")
+    print(f"{what}  clients={args.clients}  splits={splits}  "
           f"strategy={args.strategy}  grad_mode={args.grad_mode}")
     print(f"devices={len(jax.devices())}  engine={session.engine_name}"
           + (f"  [resumed at round {session.round}]" if resumed else ""))

@@ -113,8 +113,11 @@ def _mamba2_core_chunked(xh, B, C, log_a, dt, D, chunk: int):
     # intra-chunk (quadratic in Q): y_t = sum_{i<=t} exp(L_t - L_i) (C_t.B_i) u_i
     scores = jnp.einsum("bnqs,bnks->bnqk", C_c, B_c)        # (B,nc,Q,Q)
     seg = Lc[:, :, :, None, :] - Lc[:, :, None, :, :]       # (B,nc,Q,Q,H) = L_t - L_i
-    causal = jnp.tril(jnp.ones((Q, Q), bool))
-    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # mask seg BEFORE exp: non-causal entries (i > t) have seg > 0 and can
+    # overflow exp to inf, which the outer where hides in the forward pass
+    # but turns into inf * 0 = NaN in the backward (the where-grad trap)
+    decay = jnp.where(causal, jnp.exp(jnp.where(causal, seg, 0.0)), 0.0)
     attn = scores[..., None] * decay                        # (B,nc,Q,Q,H)
     y_intra = jnp.einsum("bnqkh,bnkhp->bnqhp", attn.astype(u.dtype), u)
 

@@ -1,0 +1,310 @@
+"""The production backbones through TrainSession: ``BackboneSplitModel``
+(core/backbone_splitee.py) + the ``--arch`` CLI.
+
+Coverage (the PR's acceptance gates):
+
+  * protocol conformance of the adapter, client/server partition shapes;
+  * fused ≡ reference to <= 1e-4 on a dense (glm4) and a MoE (qwen3)
+    smoke config, including an ``aggregate_every=2`` boundary;
+  * cross-engine resume round-trip (train 2k ≡ train k/save/restore/k,
+    fused -> reference hand-off) with the arch name in the manifest;
+  * restore into a *different* architecture refuses loudly;
+  * the ``--arch``/``--smoke`` CLI end to end via subprocess: trains,
+    writes a manifest + driver sidecar recording the arch, resumes, and
+    fails loudly on arch / grad-mode mismatches;
+  * the NaN-gradient regression in the mamba2 backward (the where-grad
+    trap on non-causal exp overflow) stays fixed: a zamba2 smoke step
+    keeps every parameter finite.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs as configs_mod
+from repro.api import TrainSession
+from repro.api.protocol import assert_split_model
+from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
+from repro.core.backbone_splitee import BackboneSplitModel
+from repro.data.pipeline import ClientPartitioner
+from repro.data.synthetic import SyntheticSeqClsDataset
+
+TOL = 1e-4
+#: the spmd leg pays float32 cross-device reduction-order noise per layer
+#: per round; the 4-layer transformer accumulates more of it than the MLP
+#: harness in test_spmd_engine.py, so its bound is looser (still far below
+#: any training-relevant scale)
+SPMD_TOL = 1e-3
+
+
+def _parts(cfg, n_clients, seed=0, train_size=128):
+    ds = SyntheticSeqClsDataset(vocab_size=cfg.vocab_size, seq_len=8,
+                                num_classes=8, train_size=train_size,
+                                test_size=64, seed=seed)
+    return ClientPartitioner(n_clients, seed=seed).split(*ds.train), ds.test
+
+
+def _session(model, parts, splits, engine, aggregate_every=1, lr=1e-3):
+    return TrainSession.from_config(
+        model,
+        SplitEEConfig(profile=HeteroProfile(tuple(splits)),
+                      strategy="averaging",
+                      aggregate_every=aggregate_every),
+        OptimizerConfig(lr=lr, total_steps=64),
+        parts, batch_size=16, engine=engine)
+
+
+def _max_state_delta(a, b):
+    return max(float(np.max(np.abs(np.asarray(u, np.float64)
+                                   - np.asarray(v, np.float64))))
+               for u, v in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _metric_delta(ha, hb):
+    return max(max(abs(a.client_loss - b.client_loss),
+                   abs(a.server_loss - b.server_loss))
+               for a, b in zip(ha, hb))
+
+
+@pytest.fixture(scope="module")
+def glm4():
+    cfg = configs_mod.get("glm4_9b").smoke()
+    return BackboneSplitModel(cfg, seed=0)
+
+
+# ---------------------------------------------------------------- protocol
+
+
+def test_protocol_conformance(glm4):
+    assert_split_model(glm4)                     # no raise
+    assert glm4.cut_layers == (1, 2)
+    assert glm4.name == "glm4-9b-smoke"
+
+
+def test_partition_layout(glm4):
+    # cut at boundary 0: client = segment 0 + exit head, server = seg1, seg2
+    c = glm4.make_client(1)
+    s = glm4.make_server(1)
+    assert set(c["trainable"]) == {"embed", "segments", "out"}
+    assert len(c["trainable"]["segments"]) == 1
+    assert set(s["trainable"]) == {"seg1", "seg2", "head"}
+    # deeper cut: more client segments, fewer server keys
+    c2, s2 = glm4.make_client(2), glm4.make_server(2)
+    assert len(c2["trainable"]["segments"]) == 2
+    assert set(s2["trainable"]) == {"seg2", "head"}
+    # Eq. (1): the deep server's keys are a subset of the shallow server's,
+    # so common trunks are matched by name across heterogeneous depths
+    assert set(s2["trainable"]) < set(s["trainable"])
+
+
+def test_invalid_cut_layer(glm4):
+    with pytest.raises(ValueError, match="not an exit boundary"):
+        glm4.make_client(3)
+
+
+def test_needs_exit_layers():
+    cfg = configs_mod.get("glm4_9b").smoke().with_(exit_layers=())
+    with pytest.raises(ValueError, match="exit_layers"):
+        BackboneSplitModel(cfg)
+
+
+# ------------------------------------------------------------- equivalence
+
+
+def test_fused_equals_reference_glm4(glm4):
+    parts, _ = _parts(glm4.cfg, 4)
+    splits = (1, 1, 2, 2)
+    ref = _session(glm4, parts, splits, "reference", aggregate_every=2)
+    ref.train(4)
+    fus = _session(glm4, parts, splits, "fused", aggregate_every=2)
+    fus.train(4)
+    assert _metric_delta(ref.history, fus.history) <= TOL
+    assert _max_state_delta(ref.state, fus.state) <= TOL
+
+
+def test_fused_equals_reference_qwen3_moe():
+    cfg = configs_mod.get("qwen3_moe_235b_a22b").smoke()
+    model = BackboneSplitModel(cfg, seed=0)
+    parts, _ = _parts(cfg, 2)
+    splits = (2, 2)
+    ref = _session(model, parts, splits, "reference")
+    ref.train(3)
+    fus = _session(model, parts, splits, "fused")
+    fus.train(3)
+    assert _metric_delta(ref.history, fus.history) <= TOL
+    assert _max_state_delta(ref.state, fus.state) <= TOL
+
+
+def test_mamba2_backward_stays_finite():
+    """Regression: exp overflow on non-causal segment-sum entries used to
+    poison the mamba2 VJP (inf * 0 = NaN through the where), blowing up
+    every parameter after one Adam step."""
+    cfg = configs_mod.get("zamba2_1p2b").smoke()
+    model = BackboneSplitModel(cfg, seed=0)
+    parts, _ = _parts(cfg, 2, train_size=64)
+    sess = _session(model, parts, (2, 2), "reference")
+    sess.train(2)
+    assert all(np.isfinite([m.client_loss, m.server_loss])
+               .all() for m in sess.history)
+    assert all(bool(np.isfinite(np.asarray(leaf, np.float32)).all())
+               for leaf in jax.tree.leaves(sess.state))
+
+
+# ------------------------------------------------------------------ resume
+
+
+def test_cross_engine_resume_roundtrip(glm4, tmp_path):
+    parts, test = _parts(glm4.cfg, 4)
+    splits = (1, 1, 2, 2)
+    ref = _session(glm4, parts, splits, "fused", aggregate_every=2)
+    ref.train(4)
+
+    half = _session(glm4, parts, splits, "fused", aggregate_every=2)
+    half.train(2)
+    path = str(tmp_path / "ckpt")
+    half.save(path)
+    with open(path + ".json") as f:
+        meta = json.load(f)["metadata"]
+    assert meta["model"] == "glm4-9b-smoke"      # arch recorded
+
+    # hand the state to the OTHER engine and finish the run
+    resumed = TrainSession.restore(path, glm4, parts, engine="reference")
+    assert resumed.round == 2
+    resumed.train(2)
+    assert _max_state_delta(ref.state, resumed.state) <= TOL
+    assert _metric_delta(ref.history, resumed.history) <= TOL
+
+    # evaluation runs on the restored state
+    ev = resumed.evaluate(*test, batch_size=32)
+    assert len(ev["client_acc"]) == 4
+
+
+def test_restore_refuses_other_arch(glm4, tmp_path):
+    parts, _ = _parts(glm4.cfg, 2, train_size=64)
+    sess = _session(glm4, parts, (1, 2), "reference")
+    sess.train(1)
+    path = str(tmp_path / "ckpt")
+    sess.save(path)
+
+    other = BackboneSplitModel(configs_mod.get("qwen3_moe_235b_a22b").smoke())
+    with pytest.raises(ValueError, match="different architecture"):
+        TrainSession.restore(path, other, parts)
+
+
+# -------------------------------------------------------------------- spmd
+
+SPMD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax
+from repro import configs as configs_mod
+from repro.api import TrainSession
+from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
+from repro.core.backbone_splitee import BackboneSplitModel
+from repro.data.pipeline import ClientPartitioner
+from repro.data.synthetic import SyntheticSeqClsDataset
+
+assert len(jax.devices()) == 4, jax.devices()
+cfg = configs_mod.get("glm4_9b").smoke()
+model = BackboneSplitModel(cfg, seed=0)
+ds = SyntheticSeqClsDataset(vocab_size=cfg.vocab_size, seq_len=8,
+                            num_classes=8, train_size=128, test_size=32)
+parts = ClientPartitioner(4, seed=0).split(*ds.train)
+
+def mk(engine):
+    return TrainSession.from_config(
+        model,
+        SplitEEConfig(profile=HeteroProfile((1, 1, 2, 2)),
+                      strategy="averaging", aggregate_every=2),
+        OptimizerConfig(lr=1e-3, total_steps=32), parts, batch_size=16,
+        engine=engine)
+
+ref = mk("reference"); ref.train(3)
+spmd = mk("spmd");     spmd.train(3)
+delta = max(float(np.max(np.abs(np.asarray(u, np.float64)
+                                - np.asarray(v, np.float64))))
+            for u, v in zip(jax.tree.leaves(ref.state),
+                            jax.tree.leaves(spmd.state)))
+print(json.dumps({"engine": spmd.engine_name, "param_delta": delta}))
+"""
+
+
+def test_spmd_engine_runs_backbone():
+    """The backbone adapter needs no spmd-specific code: the mesh engine
+    stages the identical cohort step, matching the reference to SPMD_TOL
+    on a 4-device host mesh (subprocess so tier-1 stays single-device)."""
+    r = subprocess.run(
+        [sys.executable, "-c", SPMD_SCRIPT], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", ""),
+             "HOME": os.environ.get("HOME", "/tmp"),
+             "JAX_PLATFORMS": "cpu"},
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600)
+    assert r.returncode == 0, r.stderr[-4000:]
+    res = json.loads(r.stdout.strip().splitlines()[-1])
+    assert res["engine"] == "spmd"
+    assert res["param_delta"] <= SPMD_TOL
+
+
+# --------------------------------------------------------------------- CLI
+
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_cli(*extra, ckpt_dir, arch="glm4_9b"):
+    args = [sys.executable, "-m", "repro.launch.train",
+            "--arch", arch, "--smoke", "--clients", "2",
+            "--batch", "16", "--seq-len", "8", "--train-size", "64",
+            "--test-size", "32", "--checkpoint-dir", str(ckpt_dir),
+            *extra]
+    return subprocess.run(
+        args, capture_output=True, text=True, cwd=_REPO_ROOT, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", ""),
+             "HOME": os.environ.get("HOME", "/tmp"),
+             "JAX_PLATFORMS": "cpu"})
+
+
+def test_arch_cli_train_resume_and_mismatches(tmp_path):
+    ckpt = tmp_path / "run"
+
+    r = _run_cli("--engine", "reference", "--rounds", "2", ckpt_dir=ckpt)
+    assert r.returncode == 0, r.stderr
+    assert "arch=glm4_9b (smoke) [glm4-9b-smoke]" in r.stdout
+    manifests = sorted(ckpt.glob("ckpt-*.json"))
+    assert manifests, r.stdout
+    with open(manifests[-1]) as f:
+        assert json.load(f)["metadata"]["model"] == "glm4-9b-smoke"
+    with open(ckpt / "driver.json") as f:
+        sidecar = json.load(f)
+    assert sidecar["arch"] == "glm4_9b" and sidecar["smoke"] is True
+
+    # resume onto the fused engine: trains only the remainder
+    r = _run_cli("--engine", "fused", "--rounds", "3", "--resume",
+                 ckpt_dir=ckpt)
+    assert r.returncode == 0, r.stderr
+    assert "[resumed at round 2]" in r.stdout
+
+    # arch mismatch dies loudly before touching the checkpoints
+    bad = _run_cli("--engine", "reference", "--rounds", "5", "--resume",
+                   ckpt_dir=ckpt, arch="qwen3_moe_235b_a22b")
+    assert bad.returncode != 0
+    assert "--resume mismatch" in bad.stderr and "--arch" in bad.stderr
+
+    # grad-mode mismatch dies loudly too
+    bad = _run_cli("--engine", "fused", "--grad-mode", "sum", "--rounds",
+                   "5", "--resume", ckpt_dir=ckpt)
+    assert bad.returncode != 0
+    assert "--resume mismatch" in bad.stderr and "--grad-mode" in bad.stderr
+
+    # unknown arch: a clear error, not a traceback
+    r = _run_cli("--engine", "reference", "--rounds", "1",
+                 ckpt_dir=tmp_path / "x", arch="not_an_arch")
+    assert r.returncode != 0
+    assert "not a registered architecture" in r.stderr

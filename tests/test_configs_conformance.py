@@ -1,0 +1,62 @@
+"""Registry-wide conformance of ``src/repro/configs/``: every architecture
+module must expose the ``config()`` / ``smoke()`` / ``profile()`` triple the
+``--arch`` CLI resolves through, with a ``HeteroProfile`` whose split layers
+are legal cut points of the config it describes."""
+import importlib
+import pkgutil
+
+import pytest
+
+import repro.configs as configs_pkg
+from repro import configs as configs_mod
+from repro.config import HeteroProfile, ModelConfig
+
+ALL_MODULES = sorted(
+    m.name for m in pkgutil.iter_modules(configs_pkg.__path__)
+    if not m.name.startswith("_"))
+
+
+def test_registry_covers_all_arch_modules():
+    # every assigned arch id resolves to a module in the package
+    for arch in configs_mod.all_arch_ids():
+        mod = configs_mod.get(arch)
+        assert mod.__name__.rsplit(".", 1)[-1] in ALL_MODULES
+    # and the package holds exactly the assigned archs + the paper's ResNet
+    assert set(ALL_MODULES) == set(configs_mod.ARCH_IDS) | {"resnet18_cifar"}
+
+
+@pytest.mark.parametrize("name", ALL_MODULES)
+def test_module_exposes_triple(name):
+    mod = importlib.import_module(f"repro.configs.{name}")
+    for fn in ("config", "smoke", "profile"):
+        assert callable(getattr(mod, fn, None)), f"{name} lacks {fn}()"
+
+
+@pytest.mark.parametrize("name", ALL_MODULES)
+def test_profile_split_layers_are_legal_cuts(name):
+    mod = importlib.import_module(f"repro.configs.{name}")
+    cfg = mod.config()
+    prof = mod.profile()
+    assert isinstance(prof, HeteroProfile)
+    assert prof.num_groups >= 1
+    for li in prof.split_layers:
+        assert 1 <= li < cfg.num_layers, (name, li)
+    if isinstance(cfg, ModelConfig):
+        # token backbones cut at exit-head boundaries (BackboneSplitModel)
+        assert set(prof.split_layers) <= set(cfg.exit_layers), name
+
+
+@pytest.mark.parametrize("name", ALL_MODULES)
+def test_smoke_is_reduced_and_splittable(name):
+    mod = importlib.import_module(f"repro.configs.{name}")
+    cfg = mod.smoke()
+    if not isinstance(cfg, ModelConfig):       # the ResNet paper model
+        return
+    assert cfg.num_layers <= 4
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    # exit heads exist so the smoke config trains through the adapter
+    assert cfg.exit_layers, name
+    for li in cfg.exit_layers:
+        assert 1 <= li < cfg.num_layers, (name, li)
