@@ -13,10 +13,16 @@ batch sharded over the mesh's ``data`` axis.  Emits:
   * ``BENCH_spmd.json``  — the three-way comparison.  The spmd leg records
     the session's ``engine_name`` selection note, and degrades to
     ``{"skipped": <reason>}`` when no multi-device mesh is available, so
-    the manifest always records the real execution path.
+    the manifest always records the real execution path;
+  * ``BENCH_spmd_fsdp.json`` — the recipe-sharded leg: the ``--recipe``
+    sharding recipe (tiny-leaf floor lowered so the MLP actually shards)
+    on a ``(2, n/2, 1)`` lanes/data/model mesh — cohort lanes, params and
+    Adam moments sharded, not replicated.  Real-or-skip-reason like the
+    spmd leg, and gated by ``--max-delta`` when it ran.
 
   PYTHONPATH=src python -m benchmarks.fused_vs_reference
-  PYTHONPATH=src python -m benchmarks.fused_vs_reference --spmd-devices 4
+  PYTHONPATH=src python -m benchmarks.fused_vs_reference --spmd-devices 4 \
+      --recipe greedy
 """
 from __future__ import annotations
 
@@ -26,6 +32,7 @@ from repro.launch.hostdevices import force_host_devices
 force_host_devices("--spmd-devices")
 
 import argparse
+import dataclasses
 import json
 import time
 from typing import Dict, List, Sequence
@@ -36,15 +43,20 @@ from repro.api import TrainSession
 from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
 from repro.core.splitee import MLPSplitModel
 from repro.data.pipeline import ClientPartitioner
+from repro.launch.mesh import make_lane_host_mesh
+from repro.launch.shardings import NAMED_RECIPES, resolve_recipe
 
 SCHEMA_KEYS = ("benchmark", "config", "reference", "fused", "speedup",
                "max_metric_delta")
 SPMD_SCHEMA_KEYS = ("benchmark", "config", "reference", "fused", "spmd",
                     "speedup", "max_metric_delta")
+FSDP_SCHEMA_KEYS = ("benchmark", "config", "reference", "fused",
+                    "spmd_fsdp", "speedup", "max_metric_delta")
 
 
 def _make_session(engine: str, splits: Sequence[int], parts, *,
-                  batch_size: int, total_steps: int) -> TrainSession:
+                  batch_size: int, total_steps: int, mesh=None,
+                  recipe=None) -> TrainSession:
     model = MLPSplitModel(in_dim=32, hidden=64, num_classes=5, num_layers=4,
                           seed=0)
     return TrainSession.from_config(
@@ -52,7 +64,8 @@ def _make_session(engine: str, splits: Sequence[int], parts, *,
         SplitEEConfig(profile=HeteroProfile(tuple(splits)),
                       strategy="averaging"),
         OptimizerConfig(lr=3e-3, total_steps=total_steps),
-        parts, batch_size=batch_size, engine=engine)
+        parts, batch_size=batch_size, engine=engine, mesh=mesh,
+        recipe=recipe)
 
 
 def _metric_delta(ref: TrainSession, other: TrainSession) -> float:
@@ -64,7 +77,8 @@ def _metric_delta(ref: TrainSession, other: TrainSession) -> float:
 
 def run(rounds: int = 60, clients: int = 4, batch_size: int = 64,
         local_epochs: int = 1, out: str = "BENCH_fused.json",
-        spmd_out: str = "BENCH_spmd.json") -> List[Dict]:
+        spmd_out: str = "BENCH_spmd.json", recipe: str = "greedy",
+        fsdp_out: str = "BENCH_spmd_fsdp.json") -> List[Dict]:
     """Time every engine over ``rounds`` post-warmup rounds and write both
     comparison JSONs.  Returns benchmark rows for benchmarks/run.py."""
     if rounds < 1 or clients < 1:
@@ -97,10 +111,10 @@ def run(rounds: int = 60, clients: int = 4, batch_size: int = 64,
     try:
         spmd_sess = make("spmd")
     except ValueError as e:
-        spmd_tr, spmd_wall = None, None
-        spmd_skip = str(e)
+        spmd_tr, spmd_wall, spmd_skip = None, None, str(e)
     else:
         spmd_tr, spmd_wall = time_engine(spmd_sess, chunk_rounds=rounds)
+        spmd_skip = None
 
     # engines consumed identical data: timed-window metrics must agree
     result = {
@@ -121,27 +135,62 @@ def run(rounds: int = 60, clients: int = 4, batch_size: int = 64,
             json.dump(result, f, indent=1)
 
     import jax
-    spmd_result = dict(result)
-    spmd_result["benchmark"] = "spmd_vs_fused_vs_reference"
-    spmd_result["config"] = dict(result["config"],
-                                 devices=len(jax.devices()))
-    if spmd_tr is not None:
-        spmd_result["spmd"] = {"wall_s": spmd_wall,
-                               "rounds_per_sec": rounds / spmd_wall,
-                               "engine_path": spmd_tr.engine_name}
-        spmd_result["speedup"] = {"fused": ref_wall / fus_wall,
-                                  "spmd": ref_wall / spmd_wall}
-        spmd_result["max_metric_delta"] = {
+
+    def leg_manifest(benchmark, leg, tr, wall, skip, config_extra):
+        """A sharded leg's manifest: the base comparison plus the leg keyed
+        ``leg`` — real (timings + engine_path) or ``{"skipped": reason}`` —
+        with per-leg speedup/max_metric_delta dicts.  Keeps every
+        ``BENCH_spmd*.json`` structurally in lockstep."""
+        r = dict(result)
+        r["benchmark"] = benchmark
+        r["config"] = dict(result["config"], devices=len(jax.devices()),
+                           **config_extra)
+        r["speedup"] = {"fused": ref_wall / fus_wall,
+                        leg: None if tr is None else ref_wall / wall}
+        r["max_metric_delta"] = {
             "fused": _metric_delta(ref_tr, fus_tr),
-            "spmd": _metric_delta(ref_tr, spmd_tr)}
-    else:
-        spmd_result["spmd"] = {"skipped": spmd_skip}
-        spmd_result["speedup"] = {"fused": ref_wall / fus_wall, "spmd": None}
-        spmd_result["max_metric_delta"] = {
-            "fused": _metric_delta(ref_tr, fus_tr), "spmd": None}
+            leg: None if tr is None else _metric_delta(ref_tr, tr)}
+        r[leg] = ({"skipped": skip} if tr is None else
+                  {"wall_s": wall, "rounds_per_sec": rounds / wall,
+                   "engine_path": tr.engine_name})
+        return r
+
+    spmd_result = leg_manifest("spmd_vs_fused_vs_reference", "spmd",
+                               spmd_tr, spmd_wall, spmd_skip, {})
     if spmd_out:
         with open(spmd_out, "w") as f:
             json.dump(spmd_result, f, indent=1)
+
+    # ---- the recipe-sharded leg: lanes + FSDP on a (2, n/2, 1) mesh ----
+    n_dev = len(jax.devices())
+    fsdp_tr = fsdp_wall = fsdp_skip = None
+    mesh_desc = None                   # recorded only when the leg ran
+    if n_dev >= 4 and n_dev % 2 == 0:
+        mesh = make_lane_host_mesh(2)
+        mesh_desc = f"(2,{n_dev // 2},1) lanes/data/model"
+        # the bench MLP's leaves are tiny; lower the replicate floor so the
+        # leg measures *sharded* params/moments, not a de-facto replicate
+        rec = dataclasses.replace(resolve_recipe(recipe),
+                                  min_shard_elems=1 << 10)
+        try:
+            sess = _make_session("spmd", splits, parts,
+                                 batch_size=batch_size,
+                                 total_steps=total_steps, mesh=mesh,
+                                 recipe=rec)
+        except ValueError as e:
+            fsdp_skip = str(e)
+        else:
+            fsdp_tr, fsdp_wall = time_engine(sess, chunk_rounds=rounds)
+    else:
+        fsdp_skip = (f"{n_dev} visible device(s); the lanes mesh needs an "
+                     f"even count >= 4 (--spmd-devices 4)")
+
+    fsdp_result = leg_manifest("spmd_fsdp_vs_fused_vs_reference",
+                               "spmd_fsdp", fsdp_tr, fsdp_wall, fsdp_skip,
+                               {"recipe": recipe, "mesh": mesh_desc})
+    if fsdp_out:
+        with open(fsdp_out, "w") as f:
+            json.dump(fsdp_result, f, indent=1)
 
     rows = [{"name": f"fused_vs_reference/{eng}/N{clients}",
              "us_per_call": result[eng]["wall_s"] / rounds * 1e6,
@@ -152,6 +201,11 @@ def run(rounds: int = 60, clients: int = 4, batch_size: int = 64,
                      "us_per_call": spmd_wall / rounds * 1e6,
                      "derived": f"{rounds / spmd_wall:.1f} rounds/s",
                      **spmd_result})
+    if fsdp_tr is not None:
+        rows.append({"name": f"fused_vs_reference/spmd_fsdp/N{clients}",
+                     "us_per_call": fsdp_wall / rounds * 1e6,
+                     "derived": f"{rounds / fsdp_wall:.1f} rounds/s",
+                     **fsdp_result})
     return rows
 
 
@@ -162,6 +216,11 @@ def main() -> None:
     ap.add_argument("--local-epochs", type=int, default=1)
     ap.add_argument("--out", default="BENCH_fused.json")
     ap.add_argument("--spmd-out", default="BENCH_spmd.json")
+    ap.add_argument("--fsdp-out", default="BENCH_spmd_fsdp.json")
+    ap.add_argument("--recipe", default="greedy",
+                    choices=sorted(NAMED_RECIPES),
+                    help="sharding recipe for the lanes+FSDP leg "
+                         "(launch/shardings.py)")
     ap.add_argument("--spmd-devices", type=int, default=0,
                     help="force N fake CPU devices so the spmd leg runs on "
                          "a single-device host (consumed pre-import)")
@@ -172,26 +231,37 @@ def main() -> None:
     args = ap.parse_args()
     rows = run(rounds=args.rounds, clients=args.clients,
                local_epochs=args.local_epochs, out=args.out,
-               spmd_out=args.spmd_out)
+               spmd_out=args.spmd_out, recipe=args.recipe,
+               fsdp_out=args.fsdp_out)
+    by_leg = {r["name"].split("/")[1]: r for r in rows}
     r = rows[0]
     print(f"reference: {r['reference']['rounds_per_sec']:.1f} rounds/s")
     print(f"fused    : {r['fused']['rounds_per_sec']:.1f} rounds/s")
     print(f"speedup  : {r['speedup']:.1f}x   "
           f"(max metric delta {r['max_metric_delta']:.2e})  -> {args.out}")
-    s = rows[-1]
-    spmd_ran = s["name"].endswith(f"spmd/N{args.clients}")
-    if spmd_ran:
+    s = by_leg.get("spmd")
+    if s is not None:
         print(f"spmd     : {s['spmd']['rounds_per_sec']:.1f} rounds/s "
               f"on {s['config']['devices']} devices "
               f"(delta vs reference "
               f"{s['max_metric_delta']['spmd']:.2e})  -> {args.spmd_out}")
     else:
         print(f"spmd     : skipped -> {args.spmd_out}")
+    fs = by_leg.get("spmd_fsdp")
+    if fs is not None:
+        print(f"spmd_fsdp: {fs['spmd_fsdp']['rounds_per_sec']:.1f} rounds/s "
+              f"(recipe {args.recipe}, lanes mesh, delta vs reference "
+              f"{fs['max_metric_delta']['spmd_fsdp']:.2e})  "
+              f"-> {args.fsdp_out}")
+    else:
+        print(f"spmd_fsdp: skipped -> {args.fsdp_out}")
 
     if args.max_delta > 0:
         deltas = {"fused": r["max_metric_delta"]}
-        if spmd_ran:
+        if s is not None:
             deltas["spmd"] = s["max_metric_delta"]["spmd"]
+        if fs is not None:
+            deltas["spmd_fsdp"] = fs["max_metric_delta"]["spmd_fsdp"]
         over = {k: v for k, v in deltas.items() if v > args.max_delta}
         if over:
             import sys

@@ -66,6 +66,7 @@ def main() -> None:
         rows = fused_vs_reference.run(
             out=os.path.join(args.artifacts, "BENCH_fused.json"),
             spmd_out=os.path.join(args.artifacts, "BENCH_spmd.json"),
+            fsdp_out=os.path.join(args.artifacts, "BENCH_spmd_fsdp.json"),
             **(dict(rounds=8) if args.quick else dict()))
         all_rows += rows
         _emit(rows, csv_rows)

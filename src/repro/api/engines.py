@@ -92,10 +92,15 @@ class SessionContext:
                  opt_cfg: OptimizerConfig,
                  client_data: Sequence[Tuple[np.ndarray, np.ndarray]],
                  batch_size: int, *, augment=None, seed: int = 0,
-                 mesh=None, grad_mode: str = "eq1"):
+                 mesh=None, grad_mode: str = "eq1", recipe=None):
         if grad_mode not in ("eq1", "sum"):
             raise ValueError(f"unknown grad_mode {grad_mode!r}; expected "
                              f"'eq1' or 'sum'")
+        # resolve eagerly so a bad --recipe name dies at the facade, not
+        # inside an engine; the spmd engine reads the resolved dataclass
+        from repro.launch.shardings import recipe_name, resolve_recipe
+        self.recipe = resolve_recipe(recipe)
+        self.recipe_name = recipe_name(recipe)
         self.model = model
         self.cfg = splitee_cfg
         self.opt_cfg = opt_cfg

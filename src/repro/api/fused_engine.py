@@ -5,7 +5,7 @@
     structure, so each cohort is stacked along a leading lane axis and its
     combined client+server step runs under one ``jax.vmap``.
   * **Rounds under lax.scan** — the exact minibatch sequence the reference
-    engine would draw is pre-staged as ``[rounds, E, k, B, ...]`` device
+    engine would draw is pre-staged as ``[rounds, k, E, B, ...]`` device
     tensors and the whole chunk rolls through one ``jax.lax.scan`` with
     donated carry; losses come back as stacked per-round arrays (one host
     sync per chunk).
@@ -28,6 +28,7 @@ the identical round body with mesh shardings.
 """
 from __future__ import annotations
 
+import os
 from typing import Callable, Dict, List, Tuple
 
 import jax
@@ -41,11 +42,18 @@ from repro.core.aggregation import stacked_cross_layer_aggregate
 from repro.core.splitee import stack_pytrees, unstack_pytrees
 from repro.core.spmd import make_cohort_train_step
 from repro.core.strategies import RoundMetrics
-from repro.data.pipeline import prestage_batches
+from repro.data.pipeline import effective_batch_size, prestage_batches
 
 
 @register_engine("fused")
 class FusedEngine(Engine):
+
+    #: staging budget (bytes) for the auto ``chunk_rounds`` default: when a
+    #: run's whole pre-staged ``[rounds, k, E, B, ...]`` tensor would exceed
+    #: it, the run is split into budget-sized chunks instead of silently
+    #: staging everything (full-size configs OOM before the first step
+    #: otherwise).  Override per instance, or via REPRO_STAGE_BUDGET_MB.
+    stage_budget_bytes: int = 1 << 30
 
     def __init__(self, ctx: SessionContext):
         super().__init__(ctx)
@@ -139,15 +147,16 @@ class FusedEngine(Engine):
         return fn
 
     # ------------------------------------------------------------- staging
-    def _put_batch(self, arr: np.ndarray) -> jnp.ndarray:
-        """Host-staged batch -> device.  The spmd subclass overrides this
-        to place each device's slice directly into the batch sharding."""
+    def _put_batch(self, arr: np.ndarray, li: int) -> jnp.ndarray:
+        """Host-staged batch for cohort ``li`` -> device.  The spmd subclass
+        overrides this to place each device's slice directly into the
+        cohort's batch sharding."""
         return jnp.asarray(arr)
 
     def _stage_chunk(self, rounds: int, local_epochs: int):
         """Draw the chunk's minibatches through the session's data cursor
         (the same sequence the reference engine would consume) and stack
-        them as ``{li: [rounds, E, k, B, ...]}`` device arrays."""
+        them as ``{li: [rounds, k, E, B, ...]}`` device arrays."""
         def drawn(i):
             while True:
                 yield self.ctx.data.draw(i)
@@ -158,10 +167,38 @@ class FusedEngine(Engine):
         for li in self._cohort_lis:
             lanes = self._lanes[li]
             xs[li] = self._put_batch(np.stack([per_client[i][0]
-                                               for i in lanes], axis=2))
+                                               for i in lanes], axis=2), li)
             ys[li] = self._put_batch(np.stack([per_client[i][1]
-                                               for i in lanes], axis=2))
+                                               for i in lanes], axis=2), li)
         return xs, ys
+
+    def _round_stage_bytes(self, local_epochs: int) -> int:
+        """Host bytes one round of pre-staged batches occupies (every
+        client's ``local_epochs`` minibatches, x and y)."""
+        total = 0
+        for x, y in self.ctx.client_data:
+            eb = effective_batch_size(len(x), self.ctx.batch_size)
+            per_example = (x.dtype.itemsize * int(np.prod(x.shape[1:]))
+                           + y.dtype.itemsize * int(np.prod(y.shape[1:])))
+            total += local_epochs * eb * per_example
+        return total
+
+    def _auto_chunk_rounds(self, rounds: int, local_epochs: int) -> int:
+        """The default chunk size when the caller passed ``chunk_rounds=0``:
+        as many rounds as fit the staging budget (at least one).  An
+        explicit per-instance ``stage_budget_bytes`` wins over the
+        REPRO_STAGE_BUDGET_MB environment default."""
+        budget = self.stage_budget_bytes
+        env = os.environ.get("REPRO_STAGE_BUDGET_MB")
+        if env and budget == FusedEngine.stage_budget_bytes:
+            try:
+                budget = int(env) << 20
+            except ValueError:
+                raise ValueError(
+                    f"REPRO_STAGE_BUDGET_MB={env!r} is not an integer "
+                    f"megabyte count") from None
+        per_round = max(1, self._round_stage_bytes(local_epochs))
+        return max(1, min(rounds, budget // per_round))
 
     def _stack_carry(self, clients, copts, servers, sopts):
         model = self.ctx.model
@@ -190,9 +227,12 @@ class FusedEngine(Engine):
             log_every: int = 0, chunk_rounds: int = 0
             ) -> Tuple[TrainState, List[RoundMetrics]]:
         """``chunk_rounds`` bounds how many rounds of pre-staged data are
-        resident at once (0 = the whole run is one compiled chunk)."""
+        resident at once (0 = auto: the whole run when it fits the staging
+        budget, budget-sized chunks otherwise — chunking never changes the
+        trajectory, see docs/ENGINES.md)."""
         self.ctx.data.align(state.batches_drawn)
-        chunk = chunk_rounds if chunk_rounds > 0 else rounds
+        chunk = (chunk_rounds if chunk_rounds > 0
+                 else self._auto_chunk_rounds(rounds, local_epochs))
         metrics: List[RoundMetrics] = []
         done = 0
         while done < rounds:

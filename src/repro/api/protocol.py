@@ -18,6 +18,17 @@ Pytree conventions the engines rely on (see docs/API.md):
   * All clients/servers sharing a split layer ``l_i`` must have identical
     pytree structure (same init seed per the paper §III-B), so cohorts can
     be stacked along a lane axis for the fused engine.
+
+Optional training-loss hooks (duck-typed, every engine honors them through
+``core.strategies.client_loss_fn`` / ``server_loss_fn``):
+
+  * ``client_loss(trainable, state, x, y) -> (loss, (h, new_state))``
+  * ``server_loss(trainable, state, h, li, y) -> (loss, new_state)``
+
+Adapters define them to train on more than the protocol's default
+cross-entropy — ``BackboneSplitModel`` routes each side's MoE
+load-balancing aux loss this way.  Evaluation always uses the plain
+forwards, so aux terms never contaminate accuracy metrics.
 """
 from __future__ import annotations
 

@@ -43,6 +43,7 @@ from repro.api.state import TrainState, init_train_state
 from repro.checkpoint import load_pytree, save_pytree
 from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
 from repro.core.strategies import RoundMetrics
+from repro.launch.shardings import recipe_from_meta, recipe_to_meta
 
 #: checkpoint manifest format version (bump on layout changes)
 CHECKPOINT_FORMAT = 1
@@ -63,13 +64,14 @@ class TrainSession:
                  client_data: Sequence[Tuple[np.ndarray, np.ndarray]],
                  batch_size: int, *, engine: str = "auto",
                  augment=None, seed: int = 0,
-                 mesh=None, grad_mode: str = "eq1",
+                 mesh=None, grad_mode: str = "eq1", recipe=None,
                  state: Optional[TrainState] = None,
                  history: Optional[List[RoundMetrics]] = None):
         assert_split_model(model)
         self.ctx = SessionContext(model, splitee_cfg, opt_cfg, client_data,
                                   batch_size, augment=augment, seed=seed,
-                                  mesh=mesh, grad_mode=grad_mode)
+                                  mesh=mesh, grad_mode=grad_mode,
+                                  recipe=recipe)
         engine_cls, self._engine_note = resolve_engine(engine, self.ctx)
         self.engine = engine_cls(self.ctx)
         self.state = (state if state is not None
@@ -84,15 +86,19 @@ class TrainSession:
                     data: Sequence[Tuple[np.ndarray, np.ndarray]],
                     batch_size: int = 64, *, engine: str = "auto",
                     augment=None, seed: int = 0,
-                    mesh=None, grad_mode: str = "eq1") -> "TrainSession":
+                    mesh=None, grad_mode: str = "eq1",
+                    recipe=None) -> "TrainSession":
         """The canonical constructor (same arguments as ``__init__``; named
         for symmetry with ``restore``).  ``mesh`` selects the device mesh
         for the spmd engine (and makes it eligible under ``engine="auto"``);
         ``grad_mode`` is ``"eq1"`` (paper-faithful) or ``"sum"`` (single
-        fused backward; averaging engines only)."""
+        fused backward; averaging engines only); ``recipe`` is the spmd
+        engine's sharding recipe — a ``launch.shardings.NAMED_RECIPES``
+        name (``"greedy"`` default, ``"megatron"``, ``"fsdp-off"``,
+        ``"replicate"``, ...) or a ``ShardingRecipe`` instance."""
         return cls(model, splitee_cfg, opt_cfg, data, batch_size,
                    engine=engine, augment=augment, seed=seed, mesh=mesh,
-                   grad_mode=grad_mode)
+                   grad_mode=grad_mode, recipe=recipe)
 
     # ---------------------------------------------------------- properties
     @property
@@ -193,6 +199,12 @@ class TrainSession:
             },
             "optimizer": opt,
             "grad_mode": self.ctx.grad_mode,
+            # the spmd sharding recipe is layout, not math: recorded for
+            # auditability, and restore reshards transparently under
+            # whatever recipe the restoring session runs (cross-recipe
+            # resume is equivalence-tested)
+            "recipe": {"name": self.ctx.recipe_name,
+                       **recipe_to_meta(self.ctx.recipe)},
             "batch_size": self.ctx.batch_size,
             "seed": self.ctx.seed,
             # the augment callable itself is not serializable, but whether
@@ -221,7 +233,7 @@ class TrainSession:
     def restore_latest(cls, save_dir: str, model,
                        client_data: Sequence[Tuple[np.ndarray, np.ndarray]],
                        *, engine: Optional[str] = None, augment=None,
-                       mesh=None) -> "TrainSession":
+                       mesh=None, recipe=None) -> "TrainSession":
         """Resume from the newest *readable* checkpoint under ``save_dir``
         (the layout :meth:`train`'s ``save_every`` writes).  Checkpoints
         are tried newest-first; a truncated or unreadable pair (a crash
@@ -243,7 +255,7 @@ class TrainSession:
                 errors.append(f"{os.path.basename(stem)}: {e}")
                 continue
             return cls.restore(stem, model, client_data, engine=engine,
-                               augment=augment, mesh=mesh)
+                               augment=augment, mesh=mesh, recipe=recipe)
         detail = f" (tried: {'; '.join(errors)})" if errors else ""
         raise FileNotFoundError(
             f"no readable TrainSession checkpoint under "
@@ -253,14 +265,18 @@ class TrainSession:
     def restore(cls, path: str, model,
                 client_data: Sequence[Tuple[np.ndarray, np.ndarray]],
                 *, engine: Optional[str] = None, augment=None,
-                mesh=None) -> "TrainSession":
+                mesh=None, recipe=None) -> "TrainSession":
         """Rebuild a session from :meth:`save` output.  Configuration comes
         from the manifest; ``model`` and ``client_data`` must be the ones
         the run was built with (the state carries every learned tensor, the
         adapter only its architecture/seed).  ``engine`` overrides the saved
         engine name — a state saved by one engine restores into any other
         that supports the strategy.  ``mesh`` (not serializable) must be
-        re-supplied when the spmd engine should run on a specific mesh."""
+        re-supplied when the spmd engine should run on a specific mesh.
+        ``recipe`` overrides the saved sharding recipe — recipes are layout,
+        not math, so a state saved under one reshards transparently into
+        another (the checkpoint holds host arrays; the restoring engine
+        places them per its own recipe)."""
         with open(path + ".json") as f:
             meta = json.load(f)["metadata"]
         if meta.get("kind") != "train_session":
@@ -291,10 +307,16 @@ class TrainSession:
         opt = dict(meta["optimizer"])
         opt["state_dtype"] = jnp.dtype(opt["state_dtype"])
         opt_cfg = OptimizerConfig(**opt)
+        if recipe is None and "recipe" in meta:
+            saved = dict(meta["recipe"])
+            name = saved.pop("name", "custom")
+            recipe = (name if name != "custom"
+                      else recipe_from_meta(saved))
         session = cls(model, splitee_cfg, opt_cfg, client_data,
                       meta["batch_size"], engine=engine or meta["engine"],
                       augment=augment, seed=meta["seed"], mesh=mesh,
-                      grad_mode=meta.get("grad_mode", "eq1"))
+                      grad_mode=meta.get("grad_mode", "eq1"),
+                      recipe=recipe)
         # fresh init has the identical pytree structure: restore into it
         session.state = load_pytree(path, session.state)
         session.history = [RoundMetrics(**m) for m in meta["history"]]

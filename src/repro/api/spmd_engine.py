@@ -1,44 +1,64 @@
-"""SPMD engine: the fused round body staged under jit with mesh shardings,
-as a pure ``TrainState -> TrainState`` executor (see docs/ENGINES.md).
+"""SPMD engine: the fused round body staged under jit with recipe-driven
+mesh shardings, as a pure ``TrainState -> TrainState`` executor (see
+docs/ENGINES.md).
 
 This is the scaling story for the Averaging/distributed strategies: the
 chunk function the fused engine scans on one device is compiled with
-explicit `jax.sharding.NamedSharding` constraints instead —
+explicit `jax.sharding.NamedSharding` constraints from a
+``launch.shardings.ShardingRecipe`` — the SAME recipe machinery the offline
+dry-run uses, so there is one sharding rule set in the repo, not two:
 
-  * the **global batch** (every cohort's pre-staged ``[rounds, E, k, B,
-    ...]`` minibatch tensor) shards its per-lane batch dimension ``B`` over
-    the mesh's batch axes (``("pod", "data")`` where present,
-    ``launch.mesh.batch_axes``), so each device computes the forward/backward
-    for its slice of every client's minibatch;
-  * parameters, Adam moments, and BN statistics **replicate**; XLA's SPMD
-    partitioner turns the per-minibatch gradient reductions into
-    ``all-reduce`` collectives over the batch axes, and the in-graph Eq. (1)
-    aggregation stays collective-free on the replicated carry.
+  * the **cohort carry** (stacked clients/servers, Adam moments, BN stats,
+    every leaf ``[E, ...]``) is placed by
+    ``launch.shardings.train_state_specs``: the lane dim shards over the
+    mesh's ``"lanes"`` axis, remaining dims get the recipe's FSDP/TP rules
+    (Adam moments mirroring their params), tiny leaves replicate;
+  * the **pre-staged batches** (``[rounds, k, E, B, ...]`` per cohort)
+    shard their lane dim over ``"lanes"`` and their per-lane batch dim
+    ``B`` over the mesh's batch axes (``("pod", "data")`` where present),
+    so each device receives only its lanes' slices;
+  * XLA's SPMD partitioner inserts the per-minibatch gradient
+    ``all-reduce`` over the batch axes, the FSDP ``all-gather`` /
+    ``reduce-scatter`` around sharded params, and the cross-lane
+    collectives for the in-graph Eq. (1) aggregation
+    (``core.aggregation.stacked_cross_layer_aggregate`` sums over the lane
+    dim, which is exactly a reduce over the ``"lanes"`` axis).
 
 The math is byte-for-byte the fused engine's (the same
 ``core.spmd.make_cohort_train_step`` under the same scanned round body), so
 spmd ``eq1`` is cross-checkable against the reference engine to float32
-reduction tolerance — including ``aggregate_every`` boundaries and
-checkpoint/resume hand-offs between engines (tests/test_spmd_engine.py).
+reduction tolerance — including ``aggregate_every`` boundaries, cross-recipe
+checkpoint resume (states are saved as host arrays and re-placed through
+whatever recipe the restoring session runs), and spmd<->fused hand-offs
+(tests/test_spmd_engine.py).
 
 Meshes: pass one explicitly (``TrainSession(..., mesh=...)`` — e.g.
-``launch.mesh.make_production_mesh()``) or let the engine build the default
-data-parallel mesh over every visible device.  On a CPU container, expose
-fake devices first: ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+``launch.mesh.make_production_mesh(lanes=4)`` or
+``launch.mesh.make_host_mesh((2, 2, 1), ("lanes", "data", "model"))``) or
+let the engine build the default data-parallel mesh over every visible
+device.  Recipes: ``TrainSession(..., recipe=...)`` — a name from
+``launch.shardings.NAMED_RECIPES`` (``"greedy"`` default, ``"megatron"``,
+``"fsdp-off"``, ``"replicate"``, ...) or a ``ShardingRecipe`` instance.  On
+a CPU container, expose fake devices first:
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import numpy as np
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.api.engines import SessionContext, register_engine
+from repro.api.engines import (SessionContext, cohort_layout,
+                               register_engine)
 from repro.api.fused_engine import FusedEngine
+from repro.core.splitee import stack_pytrees
 from repro.data.pipeline import effective_batch_size
-from repro.launch.mesh import axis_sizes, batch_axes
-from repro.launch.shardings import to_named
+from repro.launch.mesh import axis_sizes, batch_axes, lane_axis
+from repro.launch.shardings import (resolve_recipe, stage_batch_spec,
+                                    to_named, train_state_specs)
+from repro.optim import adam_init
 
 
 def default_data_mesh():
@@ -62,19 +82,71 @@ def data_parallelism(mesh) -> int:
     return int(np.prod([sizes[a] for a in batch_axes(mesh)]))
 
 
+def abstract_cohort_carry(model, split_layers, opt_cfg):
+    """The engines' cohort scan carry as a ``jax.eval_shape`` pytree:
+    ``{li: (client, client_opt, server, server_opt)}`` with every leaf
+    stacked along a leading lane dim.  ``model`` may be a ``SplitModel``
+    adapter or a zero-arg factory returning one — the factory runs under
+    abstract evaluation, so no parameters materialize (the recipe
+    conformance tests build full-arch carries this way)."""
+    lis, lanes = cohort_layout(split_layers)
+
+    def build():
+        m = model() if callable(model) else model
+        carry = {}
+        for li in lis:
+            cs = [m.make_client(li) for _ in lanes[li]]
+            ss = [m.make_server(li) for _ in lanes[li]]
+            carry[li] = (
+                m.stack_clients(cs),
+                stack_pytrees([adam_init(c["trainable"], opt_cfg)
+                               for c in cs]),
+                m.stack_clients(ss),
+                stack_pytrees([adam_init(s["trainable"], opt_cfg)
+                               for s in ss]),
+            )
+        return carry
+
+    return jax.eval_shape(build)
+
+
+def _model_num_experts(model) -> int:
+    """Expert count for the recipe's expert-parallel rules, when the
+    adapter wraps a MoE backbone config."""
+    cfg = getattr(model, "cfg", None)
+    moe = getattr(cfg, "moe", None)
+    return int(moe.num_experts) if moe is not None else -1
+
+
 @register_engine("spmd")
 class SpmdEngine(FusedEngine):
-    """Mesh-sharded execution of the fused scan+vmap round body."""
+    """Recipe-driven mesh-sharded execution of the fused scan+vmap round
+    body."""
 
     def __init__(self, ctx: SessionContext):
         super().__init__(ctx)
         self.mesh = resolve_mesh(ctx)
-        ax = batch_axes(self.mesh)
-        ax = ax if len(ax) > 1 else ax[0]
-        # one spec serves every staged leaf: [rounds, E, k, B, ...] — the
-        # per-lane batch dim shards, trailing feature dims replicate
-        self._replicated = to_named(P(), self.mesh)
-        self._batch_sharding = to_named(P(None, None, None, ax), self.mesh)
+        self.recipe = resolve_recipe(ctx.recipe)
+        self._replicated = NamedSharding(self.mesh, P())
+
+        # recipe shardings for the carry, from its abstract shapes (built
+        # once — the carry structure is fixed by the immutable context)
+        carry = abstract_cohort_carry(ctx.model, ctx.profile.split_layers,
+                                      ctx.opt_cfg)
+        self._carry_specs = train_state_specs(
+            self.recipe, self.mesh, carry,
+            num_experts=_model_num_experts(ctx.model))
+        self._carry_shardings = to_named(self._carry_specs, self.mesh)
+
+        # per-cohort staged-batch shardings ([rounds, k, E, B, ...])
+        self._batch_shardings: Dict[int, NamedSharding] = {}
+        for li in self._cohort_lis:
+            i0 = self._lanes[li][0]
+            eb = effective_batch_size(len(ctx.client_data[i0][0]),
+                                      ctx.batch_size)
+            self._batch_shardings[li] = NamedSharding(
+                self.mesh, stage_batch_spec(self.recipe, self.mesh,
+                                            self._counts[li], eb))
 
     @classmethod
     def supports(cls, ctx: SessionContext) -> Optional[str]:
@@ -86,39 +158,60 @@ class SpmdEngine(FusedEngine):
                     "visible device (e.g. XLA_FLAGS=--xla_force_host_"
                     "platform_device_count=4); only 1 device visible")
         mesh = resolve_mesh(ctx)
+        recipe = resolve_recipe(ctx.recipe)
+        sizes = axis_sizes(mesh)
         dp = data_parallelism(mesh)
-        if dp < 2:
-            return (f"mesh {axis_sizes(mesh)} has no parallelism on its "
-                    f"batch axes {batch_axes(mesh)}")
+        lax_name = lane_axis(mesh)
+        lane_sz = (sizes.get(lax_name, 1)
+                   if lax_name and recipe.shard_lanes else 1)
+        if dp < 2 and lane_sz < 2:
+            if lax_name and sizes.get(lax_name, 1) > 1:
+                return (f"mesh {sizes} only has parallelism on its lanes "
+                        f"axis, which recipe {ctx.recipe_name!r} disables "
+                        f"(shard_lanes=False); pick a lane-sharding recipe "
+                        f"or a mesh with batch-axis parallelism")
+            return (f"mesh {sizes} has no parallelism on its batch axes "
+                    f"{batch_axes(mesh)} or a lanes axis")
         for i, (xd, _) in enumerate(ctx.client_data):
             eb = effective_batch_size(len(xd), ctx.batch_size)
-            if eb % dp != 0:
+            if dp > 1 and eb % dp != 0:
                 return (f"client {i}'s effective batch size {eb} does not "
                         f"divide over the data-parallel size {dp}; adjust "
                         f"batch_size or the mesh")
+        if lane_sz > 1:
+            _, lanes = cohort_layout(ctx.profile.split_layers)
+            counts = {li: len(v) for li, v in lanes.items()}
+            if not any(c % lane_sz == 0 for c in counts.values()):
+                return (f"the mesh's {lane_sz}-way lanes axis divides no "
+                        f"cohort's lane count {counts}; equalize cohort "
+                        f"sizes, shrink the lanes axis, or use a mesh "
+                        f"without one")
         return None
 
     # ------------------------------------------------------------- staging
     def _compile_chunk(self, chunk: Callable) -> Callable:
-        """Jit the scanned round body with mesh shardings: carry (params /
-        moments / BN stats) and per-round losses replicated, the staged
-        batch tensors sharded over the batch axes.  The carry is still
-        donated, so long chunks run in place."""
-        rep, bsh = self._replicated, self._batch_sharding
+        """Jit the scanned round body with the recipe's shardings: the
+        carry (params / moments / BN stats) placed per-leaf by
+        ``train_state_specs``, staged batch tensors per-cohort by
+        ``stage_batch_spec``, per-round losses replicated.  The carry is
+        still donated, so long chunks run in place."""
+        bsh = dict(self._batch_shardings)
         return jax.jit(chunk,
-                       in_shardings=(rep, rep, bsh, bsh),
-                       out_shardings=(rep, rep),
+                       in_shardings=(self._carry_shardings,
+                                     self._replicated, bsh, dict(bsh)),
+                       out_shardings=(self._carry_shardings,
+                                      (self._replicated, self._replicated)),
                        donate_argnums=(0,))
 
-    def _put_batch(self, arr):
-        """Host-staged batch numpy -> its batch sharding directly, so each
-        device receives only its slice (never materializing the whole
-        chunk on one device)."""
-        return jax.device_put(arr, self._batch_sharding)
+    def _put_batch(self, arr, li: int):
+        """Host-staged batch numpy -> its cohort's sharding directly, so
+        each device receives only its lanes' and batch rows' slices (never
+        materializing the whole chunk on one device)."""
+        return jax.device_put(arr, self._batch_shardings[li])
 
     def _stack_carry(self, clients, copts, servers, sopts):
-        """Replicate the stacked carry across the mesh up front (avoids an
-        implicit single-device -> replicated reshard inside the jit and
-        keeps donation effective)."""
+        """Place the stacked carry into its recipe shardings up front
+        (avoids an implicit single-device -> sharded reshard inside the
+        jit and keeps donation effective)."""
         carry = super()._stack_carry(clients, copts, servers, sopts)
-        return jax.device_put(carry, self._replicated)
+        return jax.device_put(carry, self._carry_shardings)

@@ -72,7 +72,11 @@ def stacked_cross_layer_aggregate(stacked: Dict[int, Dict[str, Any]],
     participation set C_l as :func:`cross_layer_aggregate` — and broadcast
     back to every member lane.  Keys held by a single client pass through
     unchanged.  Callers gate ``aggregate_every`` boundaries around this
-    (e.g. ``lax.cond`` in repro.api.fused_engine) so no host round-trip is needed.
+    (e.g. ``lax.cond`` in repro.api.fused_engine) so no host round-trip is
+    needed.  Under the spmd engine's recipe shardings the lane-dim
+    ``jnp.sum`` is a reduce over the mesh's ``"lanes"`` axis and the
+    broadcast re-materializes each lane's shard — XLA's partitioner emits
+    the collectives; the math is identical to the single-device form.
     """
     out = {li: dict(m) for li, m in stacked.items()}
     all_keys = set()

@@ -40,9 +40,12 @@ Scope notes:
     start identical; the server copies are Eq.(1)-aggregated like any
     shared key).  This is the split-learning analogue of the 1/N
     participation approximation core/spmd.py documents;
-  * MoE router load-balance aux losses are not added to the split losses
-    (the protocol carries CE only); at smoke scale this is benign and it
-    keeps every engine's math identical.
+  * MoE router load-balance aux losses ride the optional
+    ``client_loss`` / ``server_loss`` hooks (``core.strategies``): each
+    family's training loss adds the aux total of its *own* segments
+    (weighted by the config's ``router_aux_weight``, applied inside
+    ``models.moe.route``), so routers on both sides of the cut stay
+    load-balanced while evaluation logits remain aux-free.
 """
 from __future__ import annotations
 
@@ -53,6 +56,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
+from repro.core.losses import softmax_cross_entropy
 from repro.core.splitee import _StackMixin
 from repro.models import frontend as frontend_mod
 from repro.models import heads as heads_mod
@@ -146,33 +150,68 @@ class BackboneSplitModel(_StackMixin):
 
     def _apply_segment(self, seg_params, si: int, x, positions, enc,
                        shared_p):
+        """Run one segment; returns ``(x, aux)`` where ``aux`` totals the
+        segment's MoE load-balance losses (0.0 for dense segments)."""
+        aux = jnp.zeros((), jnp.float32)
         for ri, run in enumerate(self.plan[si]):
-            x, _, _ = _run_forward(run, seg_params[ri], shared_p, x,
+            x, _, a = _run_forward(run, seg_params[ri], shared_p, x,
                                    positions, self.cfg, None, None, enc,
                                    False)
-        return x
+            aux = aux + a
+        return x, aux
 
-    def client_forward(self, trainable, state, x, train: bool
-                       ) -> Tuple[jnp.ndarray, jnp.ndarray, Any]:
+    def _client_run(self, trainable, x):
+        """(h, last-position exit logits, aux total over client segments)."""
         h = embed(trainable["embed"], x).astype(self.cfg.dtype)
         positions = jnp.arange(h.shape[1], dtype=jnp.int32)
         enc = self._enc_for(trainable, h.shape[0])
         shared_p = trainable.get("shared_attn")
+        aux = jnp.zeros((), jnp.float32)
         for si in range(len(trainable["segments"])):
-            h = self._apply_segment(trainable["segments"][si], si, h,
-                                    positions, enc, shared_p)
+            h, a = self._apply_segment(trainable["segments"][si], si, h,
+                                       positions, enc, shared_p)
+            aux = aux + a
         logits = heads_mod.exit_head(trainable["out"], h, self.cfg)
-        return h, logits[:, -1, :], state
+        return h, logits[:, -1, :], aux
 
-    def server_forward(self, trainable, state, h, li: int, train: bool
-                       ) -> Tuple[jnp.ndarray, Any]:
+    def _server_run(self, trainable, h, li: int):
+        """(last-position head logits, aux total over server segments)."""
         b = self._boundary_of(li)
         positions = jnp.arange(h.shape[1], dtype=jnp.int32)
         enc = self._enc_for(trainable, h.shape[0])
         shared_p = trainable.get("shared_attn")
         h = h.astype(self.cfg.dtype)
+        aux = jnp.zeros((), jnp.float32)
         for si in range(b + 1, len(self.plan)):
-            h = self._apply_segment(trainable[f"seg{si}"], si, h, positions,
-                                    enc, shared_p)
+            h, a = self._apply_segment(trainable[f"seg{si}"], si, h,
+                                       positions, enc, shared_p)
+            aux = aux + a
         logits = heads_mod.lm_head(trainable["head"], h, self.cfg)
-        return logits[:, -1, :], state
+        return logits[:, -1, :], aux
+
+    def client_forward(self, trainable, state, x, train: bool
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, Any]:
+        h, logits, _ = self._client_run(trainable, x)
+        return h, logits, state
+
+    def server_forward(self, trainable, state, h, li: int, train: bool
+                       ) -> Tuple[jnp.ndarray, Any]:
+        logits, _ = self._server_run(trainable, h, li)
+        return logits, state
+
+    # ------------------------------------------------------- training losses
+    def client_loss(self, trainable, state, x, y
+                    ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, Any]]:
+        """The ``core.strategies`` client-loss hook: exit-head CE plus the
+        client segments' MoE load-balance aux total (config-weighted inside
+        the router), so client-side routers train balanced."""
+        h, logits, aux = self._client_run(trainable, x)
+        return softmax_cross_entropy(logits, y) + aux, (h, state)
+
+    def server_loss(self, trainable, state, h, li: int, y
+                    ) -> Tuple[jnp.ndarray, Any]:
+        """The server-loss hook: final-head CE plus the server segments'
+        aux total (mirrors ``core.spmd.hetero_losses`` adding
+        ``out.aux_loss`` to the monolithic server loss)."""
+        logits, aux = self._server_run(trainable, h, li)
+        return softmax_cross_entropy(logits, y) + aux, state

@@ -266,9 +266,13 @@ def make_cohort_train_step(model, opt_cfg, li: int,
         separately in benchmarks; convergence-tested, not bit-compared).
 
     Gradients never flow from server to client: ``h`` crosses the boundary
-    through ``stop_gradient`` in both modes.
+    through ``stop_gradient`` in both modes.  Both modes draw the per-side
+    losses through ``strategies.client_loss_fn`` / ``server_loss_fn``, so
+    adapter loss hooks (e.g. BackboneSplitModel's MoE load-balancing aux
+    loss) reach every engine identically.
     """
-    from repro.core.strategies import make_client_step, make_server_step
+    from repro.core.strategies import (client_loss_fn, make_client_step,
+                                       make_server_step, server_loss_fn)
 
     if grad_mode == "eq1":
         cstep = make_client_step(model, opt_cfg)
@@ -289,12 +293,13 @@ def make_cohort_train_step(model, opt_cfg, li: int,
         raise ValueError(f"unknown grad_mode {grad_mode!r}; expected "
                          f"'eq1' or 'sum'")
 
+    closs_fn = client_loss_fn(model)
+    sloss_fn = server_loss_fn(model, li)
+
     def joint_loss(ctr, strv, cst, sst, x, y):
-        h, clogits, new_cst = model.client_forward(ctr, cst, x, train=True)
-        closs = softmax_cross_entropy(clogits, y)
+        closs, (h, new_cst) = closs_fn(ctr, cst, x, y)
         h = jax.lax.stop_gradient(h)
-        slogits, new_sst = model.server_forward(strv, sst, h, li, train=True)
-        sloss = softmax_cross_entropy(slogits, y)
+        sloss, new_sst = sloss_fn(strv, sst, h, y)
         return closs + sloss, (closs, sloss, new_cst, new_sst)
 
     def combined(client, copt, server, sopt, x, y, lr, lr_s):

@@ -42,14 +42,47 @@ class RoundMetrics:
 # ---------------------------------------------------------------------------
 
 
-def make_client_step(model, opt_cfg: OptimizerConfig) -> Callable:
-    """(trainable, state, opt, x, y, lr) ->
-    (trainable, state, opt, h, loss) — Alg. 1/2 lines 6-11."""
+def client_loss_fn(model) -> Callable:
+    """The client-side training loss: the adapter's ``client_loss`` hook
+    when it defines one (``(trainable, state, x, y) -> (loss, (h,
+    new_state))`` — BackboneSplitModel adds its MoE load-balancing aux loss
+    there, weighted per the config), else the protocol default: exit-head
+    cross-entropy.  Evaluation never uses the hook — aux losses are a
+    training regularizer only."""
+    custom = getattr(model, "client_loss", None)
+    if custom is not None:
+        return custom
 
     def loss_fn(trainable, state, x, y):
         h, logits, new_state = model.client_forward(trainable, state, x,
                                                     train=True)
         return softmax_cross_entropy(logits, y), (h, new_state)
+
+    return loss_fn
+
+
+def server_loss_fn(model, li: int) -> Callable:
+    """The server-side training loss: the adapter's ``server_loss`` hook
+    (``(trainable, state, h, li, y) -> (loss, new_state)``, closed over
+    ``li`` here) when defined, else final-head cross-entropy."""
+    custom = getattr(model, "server_loss", None)
+    if custom is not None:
+        def loss_fn(trainable, state, h, y):
+            return custom(trainable, state, h, li, y)
+        return loss_fn
+
+    def loss_fn(trainable, state, h, y):
+        logits, new_state = model.server_forward(trainable, state, h, li,
+                                                 train=True)
+        return softmax_cross_entropy(logits, y), new_state
+
+    return loss_fn
+
+
+def make_client_step(model, opt_cfg: OptimizerConfig) -> Callable:
+    """(trainable, state, opt, x, y, lr) ->
+    (trainable, state, opt, h, loss) — Alg. 1/2 lines 6-11."""
+    loss_fn = client_loss_fn(model)
 
     def step(trainable, state, opt, x, y, lr):
         (loss, (h, new_state)), grads = jax.value_and_grad(
@@ -64,11 +97,7 @@ def make_server_step(model, opt_cfg: OptimizerConfig, li: int) -> Callable:
     """(trainable, state, opt, h, y, lr) ->
     (trainable, state, opt, loss) — Alg. 1/2 lines 12-16; ``h`` enters as
     data, so no gradient ever flows back to the client."""
-
-    def loss_fn(trainable, state, h, y):
-        logits, new_state = model.server_forward(trainable, state, h, li,
-                                                 train=True)
-        return softmax_cross_entropy(logits, y), new_state
+    loss_fn = server_loss_fn(model, li)
 
     def step(trainable, state, opt, h, y, lr):
         (loss, new_state), grads = jax.value_and_grad(

@@ -1,8 +1,11 @@
 """Sharding recipes: PartitionSpec trees for params, optimizer state, batches
-and caches on the production mesh.
+and caches — for the offline dry-run AND the live spmd engine (the two share
+one rule set; :func:`train_state_specs` is the engine's entry point).
 
 Scheme (MaxText-style, tunable via ``ShardingRecipe`` for the §Perf loop):
   * batch dims shard over ("pod","data") when divisible, else replicate;
+  * cohort-stacked engine carries (leading lane dim ``E``) shard the lane
+    dim over the mesh's ``"lanes"`` axis when divisible;
   * 2D+ weights: tensor-parallel shard the largest divisible dim over
     "model"; with FSDP on, additionally shard the largest remaining divisible
     dim over the fsdp axes;
@@ -10,32 +13,91 @@ Scheme (MaxText-style, tunable via ``ShardingRecipe`` for the §Perf loop):
     E over ("data","model") when it matches the full grid (DeepSeek's 256),
     otherwise E over "data" with the expert hidden dim over "model";
   * stacked-run leaves (leading layer axis from the backbone scan) never
-    shard dim 0;
-  * 1D params replicate.
+    shard the layer-stack dim;
+  * 1D / tiny params (``min_shard_elems``) replicate (the lane dim still
+    shards: lane sharding is pure cohort parallelism, never a collective
+    inside a step).
 """
 from __future__ import annotations
 
 import dataclasses
+import re
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple, Union
 
 import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config import ModelConfig
-from repro.launch.mesh import axis_sizes, batch_axes
+from repro.launch.mesh import LANE_AXIS, axis_sizes, batch_axes
 
 
 @dataclass(frozen=True)
 class ShardingRecipe:
-    scheme: str = "greedy"               # greedy | megatron
+    scheme: str = "greedy"               # greedy | megatron | hybrid
     tp_axis: str = "model"
     fsdp: bool = True
     fsdp_axes: Tuple[str, ...] = ("data",)
     expert_mode: str = "auto"            # auto | data | grid
     min_shard_elems: int = 1 << 16       # replicate tiny leaves
     shard_cache_seq: bool = True         # shard decode cache seq dim on model
+    shard_lanes: bool = True             # cohort lane dim over the lanes axis
+
+
+#: the recipes the CLI / session accept by name (``--recipe`` in
+#: launch/train.py).  "replicate" is the pre-recipe spmd engine behavior:
+#: batch-only sharding, everything else replicated.
+NAMED_RECIPES: Dict[str, ShardingRecipe] = {
+    "greedy": ShardingRecipe(),
+    "megatron": ShardingRecipe(scheme="megatron"),
+    "hybrid": ShardingRecipe(scheme="hybrid"),
+    "fsdp-off": ShardingRecipe(fsdp=False),
+    "replicate": ShardingRecipe(fsdp=False, shard_lanes=False,
+                                min_shard_elems=1 << 62),
+}
+
+
+def resolve_recipe(recipe: Union[str, ShardingRecipe, None]
+                   ) -> ShardingRecipe:
+    """Name / instance / None -> a concrete :class:`ShardingRecipe`
+    (``None`` means the default "greedy" recipe)."""
+    if recipe is None:
+        return NAMED_RECIPES["greedy"]
+    if isinstance(recipe, ShardingRecipe):
+        return recipe
+    try:
+        return NAMED_RECIPES[recipe]
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown sharding recipe {recipe!r}; named recipes: "
+            f"{sorted(NAMED_RECIPES)} (or pass a ShardingRecipe)") from None
+
+
+def recipe_name(recipe: Union[str, ShardingRecipe, None]) -> str:
+    """The manifest-facing name: the matching registry name, else
+    "custom"."""
+    if recipe is None:
+        return "greedy"
+    if isinstance(recipe, str):
+        return recipe
+    for name, r in NAMED_RECIPES.items():
+        if r == recipe:
+            return name
+    return "custom"
+
+
+def recipe_to_meta(recipe: ShardingRecipe) -> dict:
+    """JSON-able checkpoint metadata for a recipe."""
+    d = dataclasses.asdict(recipe)
+    d["fsdp_axes"] = list(d["fsdp_axes"])
+    return d
+
+
+def recipe_from_meta(meta: dict) -> ShardingRecipe:
+    d = dict(meta)
+    d["fsdp_axes"] = tuple(d.get("fsdp_axes", ("data",)))
+    return ShardingRecipe(**d)
 
 
 def default_recipe(cfg: ModelConfig, mesh) -> ShardingRecipe:
@@ -83,13 +145,15 @@ def _pick_dim(shape, size, skip=(), taken=()):
 
 def _leaf_spec(leaf, sizes: Dict[str, int], recipe: ShardingRecipe,
                skip_dim0: bool, is_expert: bool, num_experts: int,
-               name: str = ""):
+               name: str = "", skip_dims: Optional[Tuple[int, ...]] = None):
     shape = leaf.shape
     if leaf.size < recipe.min_shard_elems or leaf.ndim < 2:
         return P()
     spec = [None] * leaf.ndim
-    skip = (0,) if skip_dim0 else ()
-    lead = 1 if skip_dim0 else 0       # first "real" dim after layer stacking
+    # ``skip_dims`` (a contiguous leading prefix: lane and/or layer-stack
+    # dims) generalizes the historical skip_dim0 flag
+    skip = skip_dims if skip_dims is not None else ((0,) if skip_dim0 else ())
+    lead = (max(skip) + 1) if skip else 0   # first "real" dim after stacking
 
     if is_expert:
         grid = sizes.get("data", 1) * sizes.get(recipe.tp_axis, 1)
@@ -139,6 +203,8 @@ def _leaf_spec(leaf, sizes: Dict[str, int], recipe: ShardingRecipe,
         tp_dim = _pick_dim(shape, tp_size, skip=skip)
     if tp_dim is not None and tp_size > 1:
         spec[tp_dim] = recipe.tp_axis
+    else:
+        tp_dim = None          # an inert 1-way TP pick must not block FSDP
     if recipe.fsdp:
         fsdp_size = int(np.prod([sizes.get(a, 1) for a in recipe.fsdp_axes]))
         if fsdp_size > 1:
@@ -250,3 +316,132 @@ def cache_specs(cache_abstract: Any, cfg: ModelConfig, mesh,
 def to_named(spec_tree, mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# engine carry specs — the live training entry point (repro.api.spmd_engine)
+# ---------------------------------------------------------------------------
+
+_SEG_KEY_RE = re.compile(r"seg\d+$")
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    """The string keys along a tree path (dict keys + dataclass attrs;
+    sequence indices are skipped)."""
+    out = []
+    for p in path:
+        k = getattr(p, "key", None)
+        if k is None:
+            k = getattr(p, "name", None)
+        if isinstance(k, str):
+            out.append(k)
+    return tuple(out)
+
+
+def _run_prefix(path) -> Optional[Tuple]:
+    """For a leaf inside a backbone run tree, the path prefix identifying
+    its run: ``.../segments/[si]/[ri]`` (client layout) or
+    ``.../seg{si}/[ri]`` (server layout); ``None`` elsewhere.  Leaves
+    sharing a prefix belong to one run and share layer-stackedness."""
+    for i, p in enumerate(path):
+        k = getattr(p, "key", None)
+        if k == "segments" and i + 2 < len(path):
+            return tuple(path[:i + 3])
+        if isinstance(k, str) and _SEG_KEY_RE.match(k) and i + 1 < len(path):
+            return tuple(path[:i + 2])
+    return None
+
+
+def _stacked_run_group(leaves) -> bool:
+    """A stacked run (lane dim already dropped by the caller): every leaf
+    shares the leading layer-stack dim L and norm scales — 1-D in a single
+    block — are 2-D (the same test as :func:`_is_stacked`)."""
+    if not leaves:
+        return False
+    return (min(l.ndim for l in leaves) >= 2
+            and len({l.shape[0] for l in leaves}) == 1)
+
+
+def train_state_specs(recipe: ShardingRecipe, mesh, carry: Any,
+                      *, num_experts: int = -1):
+    """PartitionSpec tree for a cohort-stacked engine carry.
+
+    ``carry`` is the fused/spmd engines' scan carry — ``{li: (client,
+    client_opt, server, server_opt)}`` with every leaf carrying a leading
+    cohort-lane dim (``jax.eval_shape`` output is fine; see
+    ``repro.api.spmd_engine.abstract_cohort_carry``).  Per leaf:
+
+      * the lane dim shards over the mesh's ``"lanes"`` axis when the
+        cohort's lane count divides it (``recipe.shard_lanes``);
+      * remaining dims get the recipe's TP/FSDP/expert rules (the same
+        ``_leaf_spec`` the offline dry-run uses), with backbone stacked-run
+        layer dims never sharded;
+      * leaves below ``recipe.min_shard_elems`` per lane (and all 1-D
+        params — Adam ``step`` counters, biases, norm scales) keep only
+        the lane spec;
+      * Adam moments mirror their params exactly: ``AdamState.m``/``.v``
+        share the param tree's structure, shapes, and leaf names, so the
+        same rules emit identical specs (asserted by
+        tests/test_configs_conformance.py).
+
+    Returns a PartitionSpec tree shaped like ``carry`` — apply
+    :func:`to_named` for device placement.
+    """
+    sizes = axis_sizes(mesh)
+    lane_sz = sizes.get(LANE_AXIS, 1) if recipe.shard_lanes else 1
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(carry)
+    groups: Dict[Tuple, list] = {}
+    for path, leaf in flat:
+        rp = _run_prefix(path)
+        if rp is not None:
+            groups.setdefault(rp, []).append(leaf)
+    # drop the lane dim before the stacked-run test: group leaves are
+    # [lanes, (L,) ...]
+    stacked = {rp: _stacked_run_group(
+                   [jax.ShapeDtypeStruct(l.shape[1:], l.dtype)
+                    for l in leaves])
+               for rp, leaves in groups.items()}
+
+    def spec_for(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        lane = (LANE_AXIS if lane_sz > 1 and leaf.shape[0] % lane_sz == 0
+                else None)
+        per_lane = leaf.size // max(1, leaf.shape[0])
+        if per_lane < recipe.min_shard_elems or leaf.ndim < 2:
+            return P(lane) if lane else P()
+        rp = _run_prefix(path)
+        skip = (0, 1) if (rp is not None and stacked[rp]) else (0,)
+        keys = _path_keys(path)
+        name = keys[-1] if keys else ""
+        is_expert = (num_experts > 1 and leaf.ndim > len(skip) + 1
+                     and leaf.shape[len(skip)] == num_experts
+                     and any(k in ("w_gate", "w_up", "w_down")
+                             for k in keys))
+        inner = _leaf_spec(leaf, sizes, recipe, False, is_expert,
+                           num_experts, name=name, skip_dims=skip)
+        spec = list(inner) + [None] * (leaf.ndim - len(inner))
+        spec[0] = lane
+        return P(*spec)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(path, leaf) for path, leaf in flat])
+
+
+def stage_batch_spec(recipe: ShardingRecipe, mesh, lane_count: int,
+                     batch: int) -> P:
+    """Spec for one cohort's pre-staged ``[rounds, local_epochs, E, B, ...]``
+    minibatch tensor: the lane dim over ``"lanes"`` and the per-lane batch
+    dim over the mesh's batch axes, each when divisible (trailing feature
+    dims replicate)."""
+    sizes = axis_sizes(mesh)
+    axes = batch_axes(mesh)
+    dp = int(np.prod([sizes[a] for a in axes])) if axes else 1
+    lane_sz = sizes.get(LANE_AXIS, 1) if recipe.shard_lanes else 1
+    lane = LANE_AXIS if lane_sz > 1 and lane_count % lane_sz == 0 else None
+    if dp > 1 and batch % dp == 0:
+        b_ax = axes if len(axes) > 1 else axes[0]
+    else:
+        b_ax = None
+    return P(None, None, lane, b_ax)

@@ -13,6 +13,14 @@ Every scale runs the same code path:
   * one device, no mesh: ``--engine auto`` degrades to the fused engine
     and says why (the ``engine_name`` selection note).
 
+Sharding is recipe-driven (``launch/shardings.py``): ``--recipe
+{greedy,megatron,hybrid,fsdp-off,replicate}`` picks how parameters and
+Adam moments spread over the mesh (FSDP over the data axis by default;
+"replicate" is batch-only sharding), and ``--lanes N`` factors a cohort-
+lane axis out of the data axis so stacked cohort lanes shard instead of
+replicating — e.g. ``--host-devices 4 --lanes 2`` splits each two-client
+cohort over two devices and each lane's batch over the other two.
+
 Checkpointing is the session's periodic-save policy: ``--save-every N``
 rotates ``ckpt-<round>`` pairs under ``--checkpoint-dir`` (keep-last-k),
 and ``--resume`` picks the run back up from the newest valid checkpoint
@@ -61,7 +69,8 @@ from repro.core.backbone_splitee import BackboneSplitModel
 from repro.core.splitee import MLPSplitModel, ResNetSplitModel
 from repro.data.pipeline import ClientPartitioner
 from repro.data.synthetic import SyntheticImageDataset, SyntheticSeqClsDataset
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_lane_host_mesh, make_production_mesh
+from repro.launch.shardings import NAMED_RECIPES
 from repro.models.resnet import ResNetConfig
 
 #: default hetero cut layers per model family (paper Table I spirit:
@@ -183,6 +192,17 @@ def main() -> None:
                     choices=["auto", "single", "multi"],
                     help="auto: engine default over visible devices; "
                          "single/multi: the production TPU mesh")
+    ap.add_argument("--recipe", default=None,
+                    choices=sorted(NAMED_RECIPES),
+                    help="spmd sharding recipe (launch/shardings.py): how "
+                         "cohort lanes, params and Adam moments spread "
+                         "over the mesh; 'replicate' is batch-only "
+                         "sharding.  Default: 'greedy' for fresh runs, "
+                         "the checkpoint's saved recipe on --resume")
+    ap.add_argument("--lanes", type=int, default=1,
+                    help="factor a cohort-lane axis of this size out of "
+                         "the mesh's data axis (shards stacked cohort "
+                         "lanes instead of replicating them)")
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force N fake CPU devices (consumed pre-import)")
     ap.add_argument("--checkpoint-dir", default="")
@@ -229,8 +249,16 @@ def main() -> None:
         check_driver_sidecar(args.checkpoint_dir, args, splits)
 
     model, parts, (xt, yt) = build_model_and_data(args, arch_cfg)
-    mesh = (make_production_mesh(multi_pod=args.mesh == "multi")
-            if args.mesh != "auto" else None)
+    try:
+        if args.mesh != "auto":
+            mesh = make_production_mesh(multi_pod=args.mesh == "multi",
+                                        lanes=args.lanes)
+        elif args.lanes > 1:
+            mesh = make_lane_host_mesh(args.lanes)
+        else:
+            mesh = None
+    except ValueError as e:
+        raise SystemExit(f"--lanes: {e}") from None
 
     splitee_cfg = SplitEEConfig(profile=HeteroProfile(splits),
                                 strategy=args.strategy,
@@ -249,7 +277,7 @@ def main() -> None:
         try:
             session = TrainSession.restore_latest(
                 args.checkpoint_dir, model, parts, engine=args.engine,
-                mesh=mesh)
+                mesh=mesh, recipe=args.recipe)
         except Exception as e:                            # noqa: BLE001
             raise SystemExit(
                 f"--resume: cannot restore from {args.checkpoint_dir!r}: "
@@ -272,13 +300,15 @@ def main() -> None:
         session = TrainSession.from_config(
             model, splitee_cfg, opt_cfg, parts, batch_size=args.batch,
             engine=args.engine, seed=args.seed, mesh=mesh,
-            grad_mode=args.grad_mode)
+            grad_mode=args.grad_mode, recipe=args.recipe)
 
     what = (f"arch={args.arch}{' (smoke)' if args.smoke else ''} "
             f"[{model.name}]" if args.arch else f"model={args.model}")
     print(f"{what}  clients={args.clients}  splits={splits}  "
           f"strategy={args.strategy}  grad_mode={args.grad_mode}")
     print(f"devices={len(jax.devices())}  engine={session.engine_name}"
+          + (f"  recipe={session.ctx.recipe_name}"
+             if session.engine.name == "spmd" else "")
           + (f"  [resumed at round {session.round}]" if resumed else ""))
 
     if args.checkpoint_dir:

@@ -16,6 +16,7 @@ Coverage (the PR's acceptance gates):
     trap on non-causal exp overflow) stays fixed: a zamba2 smoke step
     keeps every parameter finite.
 """
+import dataclasses
 import json
 import os
 import subprocess
@@ -137,6 +138,58 @@ def test_fused_equals_reference_qwen3_moe():
     fus.train(3)
     assert _metric_delta(ref.history, fus.history) <= TOL
     assert _max_state_delta(ref.state, fus.state) <= TOL
+
+
+def test_moe_aux_loss_routes_through_split_losses():
+    """The MoE load-balance aux loss reaches training through the
+    client_loss/server_loss hooks, split by family: each side's loss is its
+    CE plus its own segments' config-weighted aux total (nonzero on the MoE
+    smoke config, exactly zero on a dense one) — and the engines stay
+    equivalent with it in the graph (the qwen3 test above trains through
+    the same hooks)."""
+    from repro.core.losses import softmax_cross_entropy
+
+    cfg = configs_mod.get("qwen3_moe_235b_a22b").smoke()
+    model = BackboneSplitModel(cfg, seed=0)
+    parts, _ = _parts(cfg, 2, train_size=64)
+    x, y = parts[0][0][:8], parts[0][1][:8]
+
+    c = model.make_client(2)
+    h, logits, _ = model.client_forward(c["trainable"], c["state"], x,
+                                        train=True)
+    ce = float(softmax_cross_entropy(logits, y))
+    loss, (h2, _) = model.client_loss(c["trainable"], c["state"], x, y)
+    aux_c = float(loss) - ce
+    assert aux_c > 0, "client-side MoE segments must contribute aux"
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h))
+
+    s = model.make_server(2)
+    slogits, _ = model.server_forward(s["trainable"], s["state"], h, 2,
+                                      train=True)
+    sce = float(softmax_cross_entropy(slogits, y))
+    sloss, _ = model.server_loss(s["trainable"], s["state"], h, 2, y)
+    assert float(sloss) - sce > 0, "server-side segments must contribute aux"
+
+    # the weight knob actually scales it (weighted per the config)
+    heavy = BackboneSplitModel(
+        cfg.with_(moe=dataclasses.replace(cfg.moe,
+                                          router_aux_weight=10 * cfg.moe
+                                          .router_aux_weight)), seed=0)
+    hc = heavy.make_client(2)
+    hloss, _ = heavy.client_loss(hc["trainable"], hc["state"], x, y)
+    np.testing.assert_allclose(float(hloss) - ce, 10 * aux_c, rtol=1e-4)
+
+    # dense configs pay exactly nothing through the same hooks
+    dense = configs_mod.get("glm4_9b").smoke()
+    dmodel = BackboneSplitModel(dense, seed=0)
+    dparts, _ = _parts(dense, 2, train_size=64)
+    dx, dy = dparts[0][0][:8], dparts[0][1][:8]
+    dc = dmodel.make_client(2)
+    _, dlogits, _ = dmodel.client_forward(dc["trainable"], dc["state"], dx,
+                                          train=True)
+    dloss, _ = dmodel.client_loss(dc["trainable"], dc["state"], dx, dy)
+    assert float(dloss) == pytest.approx(
+        float(softmax_cross_entropy(dlogits, dy)), abs=0)
 
 
 def test_mamba2_backward_stays_finite():

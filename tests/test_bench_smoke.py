@@ -16,20 +16,21 @@ def bench_artifacts(tmp_path_factory):
     d = tmp_path_factory.mktemp("bench")
     out = os.path.join(d, "BENCH_fused.json")
     spmd_out = os.path.join(d, "BENCH_spmd.json")
+    fsdp_out = os.path.join(d, "BENCH_spmd_fsdp.json")
     rows = fused_vs_reference.run(rounds=2, clients=4, batch_size=32,
-                                  out=out, spmd_out=spmd_out)
-    return rows, out, spmd_out
+                                  out=out, spmd_out=spmd_out,
+                                  fsdp_out=fsdp_out)
+    return rows, out, spmd_out, fsdp_out
 
 
 def test_fused_benchmark_emits_valid_json(bench_artifacts):
-    rows, out, _ = bench_artifacts
+    rows, out, _, _ = bench_artifacts
 
-    # rows consumable by benchmarks/run.py's CSV emitter; the spmd row is
-    # present exactly when the engine supported this host (it may reject a
-    # multi-device host too, e.g. when the batch doesn't divide the mesh)
-    assert len(rows) in (2, 3)
+    # rows consumable by benchmarks/run.py's CSV emitter; the spmd and
+    # spmd_fsdp rows are present exactly when those legs ran on this host
+    assert len(rows) in (2, 3, 4)
     if len(jax.devices()) == 1:
-        assert len(rows) == 2               # spmd needs a mesh
+        assert len(rows) == 2               # spmd legs need a mesh
     for r in rows:
         assert set(("name", "us_per_call", "derived")) <= set(r)
 
@@ -52,7 +53,7 @@ def test_spmd_benchmark_manifest_records_execution_path(bench_artifacts):
     """The three-way manifest must always say what actually ran: real
     timings (with the engine_path note) on a multi-device host, or an
     explicit skip reason on a single-device one — never a silent absence."""
-    _, _, spmd_out = bench_artifacts
+    _, _, spmd_out, _ = bench_artifacts
     with open(spmd_out) as f:
         data = json.load(f)
     assert set(fused_vs_reference.SPMD_SCHEMA_KEYS) <= set(data)
@@ -72,3 +73,26 @@ def test_spmd_benchmark_manifest_records_execution_path(bench_artifacts):
         assert data["spmd"]["engine_path"] == "spmd"
     if len(jax.devices()) == 1:
         assert "skipped" in data["spmd"]
+
+
+def test_spmd_fsdp_manifest_real_or_skip_reason(bench_artifacts):
+    """The recipe-sharded leg's manifest (BENCH_spmd_fsdp.json) is
+    real-or-skip-reason like the spmd one, records the recipe and lanes
+    mesh, and — when it ran — stays inside the delta gate's bound."""
+    _, _, _, fsdp_out = bench_artifacts
+    with open(fsdp_out) as f:
+        data = json.load(f)
+    assert set(fused_vs_reference.FSDP_SCHEMA_KEYS) <= set(data)
+    assert data["benchmark"] == "spmd_fsdp_vs_fused_vs_reference"
+    assert data["config"]["recipe"] == "greedy"
+    if "skipped" in data["spmd_fsdp"]:
+        assert data["spmd_fsdp"]["skipped"]     # non-empty reason
+        assert data["speedup"]["spmd_fsdp"] is None
+        if len(jax.devices()) < 4:
+            assert "device" in data["spmd_fsdp"]["skipped"]
+    else:
+        assert len(jax.devices()) >= 4
+        assert "lanes" in data["config"]["mesh"]
+        assert data["spmd_fsdp"]["wall_s"] > 0
+        assert data["spmd_fsdp"]["engine_path"] == "spmd"
+        assert data["max_metric_delta"]["spmd_fsdp"] < 1e-4

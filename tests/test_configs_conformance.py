@@ -1,19 +1,34 @@
 """Registry-wide conformance of ``src/repro/configs/``: every architecture
 module must expose the ``config()`` / ``smoke()`` / ``profile()`` triple the
 ``--arch`` CLI resolves through, with a ``HeteroProfile`` whose split layers
-are legal cut points of the config it describes."""
+are legal cut points of the config it describes — and every smoke config's
+cohort carry must produce *legal* ``train_state_specs`` on the 4-device
+lanes/data/model host mesh under the named sharding recipes (every sharded
+dim divisible; Adam moment specs identical to their params')."""
+import dataclasses
 import importlib
 import pkgutil
 
+import jax
+import numpy as np
 import pytest
+from jax.sharding import PartitionSpec as P
 
 import repro.configs as configs_pkg
 from repro import configs as configs_mod
-from repro.config import HeteroProfile, ModelConfig
+from repro.api.spmd_engine import abstract_cohort_carry
+from repro.config import HeteroProfile, ModelConfig, OptimizerConfig
+from repro.core.backbone_splitee import BackboneSplitModel
+from repro.launch.mesh import MeshSpec, axis_sizes
+from repro.launch.shardings import (NAMED_RECIPES, train_state_specs)
 
 ALL_MODULES = sorted(
     m.name for m in pkgutil.iter_modules(configs_pkg.__path__)
     if not m.name.startswith("_"))
+
+#: the 4-device host mesh the mesh CI job runs on (device-free description:
+#: spec legality is a pure shape computation)
+HOST_MESH = MeshSpec((2, 2, 1), ("lanes", "data", "model"))
 
 
 def test_registry_covers_all_arch_modules():
@@ -60,3 +75,68 @@ def test_smoke_is_reduced_and_splittable(name):
     assert cfg.exit_layers, name
     for li in cfg.exit_layers:
         assert 1 <= li < cfg.num_layers, (name, li)
+
+
+# ---------------------------------------------------------------------------
+# recipe conformance: legal train_state_specs on the 4-device host mesh
+# ---------------------------------------------------------------------------
+
+
+def _p_leaves(tree):
+    return jax.tree.flatten(tree, is_leaf=lambda s: isinstance(s, P))[0]
+
+
+def _smoke_carry(cfg):
+    """The 4-client cohort carry of a smoke config, fully abstract (the
+    adapter and its parameters build under ``jax.eval_shape`` — nothing
+    materializes).  Returns ``(carry, splits)``."""
+    cuts = tuple(sorted(cfg.exit_layers))
+    splits = tuple(cuts[i % len(cuts)] for i in range(4))
+    carry = abstract_cohort_carry(lambda: BackboneSplitModel(cfg, seed=0),
+                                  splits, OptimizerConfig(total_steps=8))
+    return carry, splits
+
+
+@pytest.mark.parametrize("recipe_name", ["greedy", "megatron"])
+@pytest.mark.parametrize("name", ALL_MODULES)
+def test_smoke_train_state_specs_legal_on_host_mesh(name, recipe_name):
+    """Every registered arch's smoke cohort carry gets specs from the named
+    recipes (with the tiny-leaf floor lowered so sharding actually
+    triggers) in which every sharded dim divides its mesh axes and Adam
+    moments shard exactly like their params."""
+    mod = importlib.import_module(f"repro.configs.{name}")
+    cfg = mod.smoke()
+    if not isinstance(cfg, ModelConfig):       # the ResNet paper model
+        pytest.skip("not a token backbone")
+    carry, splits = _smoke_carry(cfg)
+    recipe = dataclasses.replace(NAMED_RECIPES[recipe_name],
+                                 min_shard_elems=2)
+    n_exp = cfg.moe.num_experts if cfg.moe else -1
+    specs = train_state_specs(recipe, HOST_MESH, carry, num_experts=n_exp)
+    sizes = axis_sizes(HOST_MESH)
+
+    spec_leaves = _p_leaves(specs)
+    carry_leaves = jax.tree.leaves(carry)
+    assert len(spec_leaves) == len(carry_leaves)
+    used = set()
+    for leaf, spec in zip(carry_leaves, spec_leaves):
+        assert len(spec) <= leaf.ndim, (leaf.shape, spec)
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            used |= set(axes)
+            k = int(np.prod([sizes[a] for a in axes]))
+            assert dim % k == 0, (name, leaf.shape, spec)
+    # the lanes axis is in play exactly when some cohort's lane count
+    # divides the 2-way axis (true for every current arch's smoke cuts)
+    counts = [splits.count(li) for li in set(splits)]
+    if any(c % sizes["lanes"] == 0 for c in counts):
+        assert "lanes" in used, name
+
+    # moments mirror their params, cohort by cohort
+    for li, (client, copt, server, sopt) in specs.items():
+        assert _p_leaves(copt.m) == _p_leaves(client["trainable"]), (name, li)
+        assert _p_leaves(copt.v) == _p_leaves(client["trainable"]), (name, li)
+        assert _p_leaves(sopt.m) == _p_leaves(server["trainable"]), (name, li)
+        assert _p_leaves(sopt.v) == _p_leaves(server["trainable"]), (name, li)

@@ -100,6 +100,34 @@ def test_fused_chunked_matches_single_chunk():
     _assert_engines_match(one, many)
 
 
+def test_auto_chunk_rounds_respects_stage_budget():
+    """chunk_rounds=0 is a *budgeted* default, not stage-everything: when
+    the whole run's pre-staged tensors would blow the budget, the engine
+    picks the largest chunk that fits (floor 1) — without changing the
+    trajectory."""
+    one, _ = _make("fused", "averaging", aggregate_every=2)
+    auto, _ = _make("fused", "averaging", aggregate_every=2)
+    eng = auto.engine
+    per_round = eng._round_stage_bytes(local_epochs=1)
+    # 4 clients x 64x16 f32 x + 64 i32 y = 4 * (64*16*4 + 64*4)
+    assert per_round == 4 * (64 * 16 * 4 + 64 * 4)
+    # a budget of ~2.5 rounds -> chunks of 2; floor at 1 when even one
+    # round exceeds the budget; whole run when it fits
+    eng.stage_budget_bytes = int(2.5 * per_round)
+    assert eng._auto_chunk_rounds(6, 1) == 2
+    assert eng._auto_chunk_rounds(1, 1) == 1
+    eng.stage_budget_bytes = per_round - 1
+    assert eng._auto_chunk_rounds(6, 1) == 1
+    eng.stage_budget_bytes = 100 * per_round
+    assert eng._auto_chunk_rounds(6, 1) == 6
+    assert eng._auto_chunk_rounds(6, 2) == 6   # 2x data still fits
+    # trained under the tight budget, the trajectory is unchanged
+    eng.stage_budget_bytes = int(2.5 * per_round)
+    one.train(6)
+    auto.train(6)                              # chunk_rounds=0 -> auto
+    _assert_engines_match(one, auto)
+
+
 def test_fused_sum_grad_mode_matches_eq1():
     """The split-boundary stop_gradient decouples the client/server
     parameter families, so the 'sum' mode's single fused backward computes

@@ -44,7 +44,7 @@ def _blob_parts(n_clients, n=600, d=16, classes=3, seed=0):
 
 
 def _session(engine, parts, splits=(1, 2, 2, 3), grad_mode="eq1",
-             aggregate_every=2, mesh=None):
+             aggregate_every=2, mesh=None, recipe=None):
     model = MLPSplitModel(in_dim=16, hidden=32, num_classes=3, num_layers=4,
                           seed=0)
     return model, TrainSession.from_config(
@@ -53,7 +53,8 @@ def _session(engine, parts, splits=(1, 2, 2, 3), grad_mode="eq1",
                       strategy="averaging",
                       aggregate_every=aggregate_every),
         OptimizerConfig(lr=3e-3, total_steps=60),
-        parts, batch_size=64, engine=engine, grad_mode=grad_mode, mesh=mesh)
+        parts, batch_size=64, engine=engine, grad_mode=grad_mode, mesh=mesh,
+        recipe=recipe)
 
 
 def _max_state_delta(a, b):
@@ -145,6 +146,54 @@ p = mk("spmd"); p.train(5, save_every=2, save_dir=ckdir, keep_last=2)
 res["ckpts"] = sorted(f for f in os.listdir(ckdir) if f.endswith(".json"))
 res["latest_round"] = TrainSession.restore_latest(ckdir, model, parts).round
 
+# --- lane + FSDP recipe on the (2,2,1) lanes/data/model host mesh ---
+from repro.launch.mesh import make_lane_host_mesh
+from repro.launch.shardings import ShardingRecipe
+
+lane_mesh = make_lane_host_mesh(2)
+fsdp = ShardingRecipe(min_shard_elems=2)     # force sharding of tiny leaves
+
+def mk2(engine, mesh=None, recipe=None):
+    # even cohorts (two clients per cut) so the 2-way lanes axis divides
+    return TrainSession.from_config(
+        model,
+        SplitEEConfig(profile=HeteroProfile((1, 1, 2, 2)),
+                      strategy="averaging", aggregate_every=2),
+        OptimizerConfig(lr=3e-3, total_steps=60), parts, batch_size=64,
+        engine=engine, mesh=mesh, recipe=recipe)
+
+ref2 = mk2("reference"); ref2.train(4, local_epochs=2)
+lane = mk2("spmd", mesh=lane_mesh, recipe=fsdp)
+# params and Adam moments are ACTUALLY sharded: probe addressable shards
+# of the engine-placed carry (cohort li=1, layer1 weight [E=2, 16, 32])
+st = lane.state
+carry = lane.engine._stack_carry(list(st.clients), list(st.client_opts),
+                                 list(st.servers), list(st.server_opts))
+w = carry[1][0]["trainable"]["layers"]["layer1"]["w"]
+m = carry[1][1].m["layers"]["layer1"]["w"]
+res["lane_w_global"] = list(w.shape)
+res["lane_w_shard"] = list(w.addressable_shards[0].data.shape)
+res["lane_m_shard"] = list(m.addressable_shards[0].data.shape)
+lane.train(4, local_epochs=2)
+res["lane_param_delta"] = max_state_delta(ref2, lane)
+res["lane_metric_delta"] = max(
+    max(abs(a.client_loss - b.client_loss),
+        abs(a.server_loss - b.server_loss))
+    for a, b in zip(ref2.history, lane.history))
+
+# --- cross-recipe resume: lane+FSDP -> save -> "replicate" on the plain
+# data mesh (and the saved custom recipe restores by default) ---
+half3 = mk2("spmd", mesh=lane_mesh, recipe=fsdp)
+half3.train(2, local_epochs=2)
+half3.save(os.path.join(d, "ck3"))
+same = TrainSession.restore(os.path.join(d, "ck3"), model, parts,
+                            engine="spmd")
+res["restored_recipe_min_elems"] = same.ctx.recipe.min_shard_elems
+cross = TrainSession.restore(os.path.join(d, "ck3"), model, parts,
+                             engine="spmd", recipe="replicate")
+cross.train(2, local_epochs=2)
+res["cross_recipe_resume_delta"] = max_state_delta(ref2, cross)
+
 print(json.dumps(res))
 """
 
@@ -193,6 +242,37 @@ def test_spmd_periodic_save_policy(harness):
     assert harness["latest_round"] == 5
 
 
+def test_lane_fsdp_params_actually_shard(harness):
+    """Acceptance: under a lane+FSDP recipe on the (2,2,1) host mesh, the
+    cohort carry's params AND Adam moments are sharded, not replicated —
+    asserted via addressable-shard shapes: lane dim 2 -> 1 on the lanes
+    axis, the FSDP-picked dim halved on the data axis, moments mirroring
+    their params exactly."""
+    gw = harness["lane_w_global"]
+    sw = harness["lane_w_shard"]
+    assert gw == [2, 16, 32]
+    assert sw[0] == 1                       # lane dim split over "lanes"
+    assert int(np.prod(sw)) == int(np.prod(gw)) // 4   # 4-way total
+    assert harness["lane_m_shard"] == sw    # moments mirror params
+
+
+def test_lane_fsdp_matches_reference(harness):
+    """Acceptance: spmd with the lane+FSDP recipe matches the reference
+    engine to <= 1e-4 on params and per-round metrics across an
+    aggregate_every=2 boundary."""
+    assert harness["lane_param_delta"] <= TOL, harness
+    assert harness["lane_metric_delta"] <= TOL, harness
+
+
+def test_cross_recipe_resume(harness):
+    """Acceptance: a state saved under the lane+FSDP recipe restores and
+    continues under "replicate" on a plain data mesh (recipes are layout,
+    not math), matching the uninterrupted reference run; restoring without
+    an override brings the saved custom recipe back."""
+    assert harness["restored_recipe_min_elems"] == 2
+    assert harness["cross_recipe_resume_delta"] <= TOL, harness
+
+
 # ---------------------------------------------------------------------------
 # in-process mesh tests (the SKILL.md tier-1 mesh job; skip on one device)
 # ---------------------------------------------------------------------------
@@ -224,6 +304,55 @@ def test_spmd_explicit_mesh_roundtrip():
     one.train(4)
     many.train(4, chunk_rounds=2)
     assert _max_state_delta(one.state, many.state) <= TOL
+
+
+@pytest.mark.mesh
+@multi_device
+def test_lane_fsdp_matches_reference_in_process():
+    """Lane+FSDP recipe on an in-process (2, n//2, 1) lanes mesh: the
+    sharded run matches the reference trajectory, and the compiled carry
+    shardings are non-trivial."""
+    from repro.launch.mesh import make_lane_host_mesh
+    from repro.launch.shardings import ShardingRecipe
+
+    if len(jax.devices()) % 2:
+        pytest.skip("needs an even device count for the lanes axis")
+    mesh = make_lane_host_mesh(2)
+    parts = _blob_parts(4)
+    _, ref = _session("reference", parts, splits=(1, 1, 2, 2))
+    _, lane = _session("spmd", parts, splits=(1, 1, 2, 2), mesh=mesh,
+                       recipe=ShardingRecipe(min_shard_elems=2))
+    specs = jax.tree.leaves(
+        lane.engine._carry_specs,
+        is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+    assert any("lanes" in s for s in specs if s)    # lanes axis in use
+    ref.train(3, local_epochs=2)
+    lane.train(3, local_epochs=2)
+    assert _max_state_delta(ref.state, lane.state) <= TOL
+    assert _max_metric_delta(ref, lane) <= TOL
+
+
+@pytest.mark.mesh
+@multi_device
+def test_supports_rejects_wasted_lane_axis():
+    """A lanes axis no cohort's lane count divides must fail at
+    construction with an actionable diagnostic."""
+    from repro.launch.mesh import make_lane_host_mesh
+
+    n = len(jax.devices())
+    if n < 4 or n % 4:
+        pytest.skip("needs >= 4 devices for a 4-way lanes axis")
+    mesh = make_lane_host_mesh(4)
+    parts = _blob_parts(4)
+    model = MLPSplitModel(in_dim=16, hidden=32, num_classes=3, num_layers=4,
+                          seed=0)
+    with pytest.raises(ValueError, match="lanes axis"):
+        TrainSession.from_config(
+            model,
+            SplitEEConfig(profile=HeteroProfile((1, 2, 2, 3)),
+                          strategy="averaging"),
+            OptimizerConfig(total_steps=10), parts, batch_size=64,
+            engine="spmd", mesh=mesh)
 
 
 @pytest.mark.mesh
