@@ -5,7 +5,7 @@ offline CPU container reproduces the *comparisons* (strategy orderings,
 difficulty trends, threshold trade-off) at reduced scale: width-0.25
 ResNet-18, synthetic class-conditional datasets (see data/synthetic.py), 12
 clients, tens of rounds.  Absolute accuracies are NOT comparable to the
-paper; orderings and gaps are — see EXPERIMENTS.md §Paper-validation.
+paper; orderings and gaps are — see docs/EXPERIMENTS.md §Paper-validation.
 """
 from __future__ import annotations
 

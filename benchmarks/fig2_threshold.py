@@ -1,7 +1,8 @@
 """Paper Fig. 2: sensitivity of collaborative inference to the confidence
-threshold.  Trains the Sequential strategy on the hard dataset (syn100,
-homogeneous clients), then sweeps the entropy threshold and records
-accuracy + client adoption ratio + mean entropy per split depth."""
+threshold.  Trains the Sequential strategy on the learnable 10-class
+dataset (syn10 default, homogeneous clients — see ``run`` for why the hard
+syn100 stand-in is not used here), then sweeps the entropy threshold and
+records accuracy + client adoption ratio + mean entropy per split depth."""
 from __future__ import annotations
 
 import time
@@ -19,12 +20,12 @@ def run(rounds: int = 40, train_size: int = 1200, test_size: int = 384,
     """Paper Fig. 2 uses CIFAR-100; at this container's reduced training
     budget the 100-class exits stay uniformly unconfident (H ~ ln 100), so
     the sweep is demonstrated on the learnable 10-class stand-in where the
-    entropy gate actually discriminates (see EXPERIMENTS.md)."""
+    entropy gate actually discriminates (see docs/EXPERIMENTS.md)."""
     rows = []
     ds = make_dataset(dataset, train_size, test_size, seed=seed)
     # paper sweeps tau in [0, 4] at 0.05 granularity; we use a coarser grid
     # over the same range (tau here is the ENTROPY threshold tau_H; the
-    # paper's conservativeness axis is H_CAP - tau_H, see DESIGN.md §1).
+    # paper's conservativeness axis is H_CAP - tau_H, docs/DESIGN.md §1).
     taus = np.linspace(0.0, H_CAP, num_taus)
     for layer in layers:
         splits = (layer,) * n_clients

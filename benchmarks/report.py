@@ -1,8 +1,8 @@
-"""Generate EXPERIMENTS.md §Dry-run and §Roofline sections from the dry-run
+"""Generate docs/EXPERIMENTS.md §Dry-run and §Roofline sections from the dry-run
 artifacts.  Usage:
 
   PYTHONPATH=src python -m benchmarks.report \
-      experiments/artifacts/dryrun_baseline.jsonl >> EXPERIMENTS.md
+      experiments/artifacts/dryrun_baseline.jsonl >> docs/EXPERIMENTS.md
 """
 from __future__ import annotations
 

@@ -1,0 +1,188 @@
+"""Continuous-batching serving benchmark: ``repro.api.ServeSession`` on a
+smoke arch.
+
+Three measurements, one ``BENCH_serve.json``:
+
+  * **throughput / latency** — a request stream served through the slot
+    pool; requests/sec, tokens/sec, and p50/p99 per-token decode latency
+    (each decoded token inherits its tick's wall time);
+  * **parity** — every request is replayed through the sequential
+    ``make_serve_step`` reference (``repro.api.sequential_reference``); the
+    continuous-batching engine must reproduce tokens AND gate decisions
+    exactly, with gate entropies within ``--max-delta`` (the CI serve-smoke
+    gate);
+  * **adoption-ratio-vs-tau** — the paper's Fig. 2 x-axis: the same request
+    stream swept over entropy thresholds.  ``tau`` is a traced runtime
+    scalar in the decode step, so the sweep reuses one compilation.
+
+  PYTHONPATH=src python -m benchmarks.serve_bench --max-delta 1e-5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro import configs as configs_mod
+from repro.api.serve_session import (ServeSession, resolve_serve_boundary,
+                                     sequential_reference)
+from repro.models.backbone import init_backbone
+
+SCHEMA_KEYS = ("benchmark", "config", "throughput", "latency_ms", "parity",
+               "adoption_vs_tau")
+
+
+def _make_prompts(cfg, requests: int, prompt_len: int, seed: int):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, prompt_len)
+            for _ in range(requests)]
+
+
+def _serve(session: ServeSession, prompts, decode_tokens: int):
+    """Submit and drain; returns (results by rid, per-token tick latencies)."""
+    for p in prompts:
+        session.submit(p, decode_tokens=decode_tokens)
+    tick_lat: List[float] = []
+    while True:
+        served_before = session.stats.tokens
+        t0 = time.perf_counter()
+        more = session.step()
+        dt = time.perf_counter() - t0
+        tick_lat.extend([dt] * (session.stats.tokens - served_before))
+        if not more:
+            break
+    return {r.rid: r for r in session.results}, tick_lat
+
+
+def run(arch: str = "glm4-9b", requests: int = 12, slots: int = 4,
+        prompt_len: int = 8, decode_tokens: int = 8, tau: float = 2.0,
+        boundary: int = 0, num_taus: int = 5, seed: int = 0,
+        out: str = "BENCH_serve.json") -> Dict:
+    """Serve ``requests`` prompts through a ``slots``-wide ServeSession on
+    the ``arch`` smoke config and write the manifest.  Weights are
+    seed-initialized — the checkpoint-restore path is covered by
+    tests/test_serve_session.py; this bench measures the engine."""
+    cfg = configs_mod.get(arch).smoke()
+    _, cut, skip_frac = resolve_serve_boundary(cfg, boundary)
+    params = init_backbone(jax.random.PRNGKey(seed), cfg)
+    max_len = prompt_len + 1 + decode_tokens
+    prompts = _make_prompts(cfg, requests, prompt_len, seed + 1)
+
+    session = ServeSession(cfg, params, tau=tau, boundary=boundary,
+                           slots=slots, max_len=max_len)
+    # warmup: compile prefill + decode step outside the timed window
+    session.submit(prompts[0], decode_tokens=decode_tokens)
+    session.run()
+    session._done.clear()
+
+    t0 = time.perf_counter()
+    by_rid, tick_lat = _serve(session, prompts, decode_tokens)
+    wall = time.perf_counter() - t0
+    lat = np.asarray(tick_lat) * 1e3
+
+    tok_mis = gate_mis = 0
+    max_ent_delta = 0.0
+    for rid in sorted(by_rid):
+        ref = sequential_reference(cfg, params, by_rid[rid].prompt,
+                                   decode_tokens, tau=tau,
+                                   boundary=boundary, max_len=max_len)
+        got = by_rid[rid]
+        tok_mis += sum(a != b for a, b in zip(got.tokens, ref.tokens))
+        gate_mis += sum(a != b for a, b in zip(got.exited, ref.exited))
+        if ref.entropy:
+            max_ent_delta = max(max_ent_delta, float(np.max(np.abs(
+                np.asarray(got.entropy) - np.asarray(ref.entropy)))))
+
+    # Fig.-2 axis: adoption ratio vs entropy threshold.  Random-init exit
+    # entropies sit near ln(V); sweep past it so the curve spans 0 -> 1.
+    taus = np.linspace(0.0, 1.1 * np.log(cfg.vocab_size), num_taus)
+    sweep = []
+    for t in taus:
+        session.tau = float(t)       # traced scalar: no recompilation
+        session._done.clear()
+        sweep_by_rid, _ = _serve(session, prompts, decode_tokens)
+        ratio = float(np.mean([r.adoption_ratio
+                               for r in sweep_by_rid.values()]))
+        sweep.append({"tau": round(float(t), 4),
+                      "adoption_ratio": round(ratio, 4)})
+    session.tau = tau
+
+    result = {
+        "benchmark": "serve_continuous_batching",
+        "config": {"arch": cfg.name, "requests": requests, "slots": slots,
+                   "prompt_len": prompt_len, "decode_tokens": decode_tokens,
+                   "tau": tau, "boundary": boundary, "cut_layer": cut,
+                   "skip_frac": round(skip_frac, 4), "max_len": max_len,
+                   "exit_policy": session.exit_policy},
+        "throughput": {"wall_s": wall,
+                       "requests_per_sec": requests / wall,
+                       "tokens_per_sec": len(tick_lat) / wall},
+        "latency_ms": {"p50": float(np.percentile(lat, 50)),
+                       "p99": float(np.percentile(lat, 99)),
+                       "mean": float(lat.mean())},
+        "parity": {"requests": requests, "token_mismatches": tok_mis,
+                   "gate_mismatches": gate_mis,
+                   "max_entropy_delta": max_ent_delta},
+        "adoption_vs_tau": sweep,
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--decode-tokens", type=int, default=8)
+    ap.add_argument("--tau", type=float, default=2.0)
+    ap.add_argument("--boundary", type=int, default=0)
+    ap.add_argument("--num-taus", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--max-delta", type=float, default=0.0,
+                    help="exit non-zero on any token/gate mismatch vs the "
+                         "sequential reference, or when the gate-entropy "
+                         "delta exceeds this bound (the CI serve-smoke "
+                         "gate; 0 disables)")
+    args = ap.parse_args()
+    r = run(arch=args.arch, requests=args.requests, slots=args.slots,
+            prompt_len=args.prompt_len, decode_tokens=args.decode_tokens,
+            tau=args.tau, boundary=args.boundary, num_taus=args.num_taus,
+            seed=args.seed, out=args.out)
+
+    th, la, pa = r["throughput"], r["latency_ms"], r["parity"]
+    print(f"arch={r['config']['arch']} slots={r['config']['slots']} "
+          f"tau={r['config']['tau']} boundary={r['config']['boundary']} "
+          f"(cut layer {r['config']['cut_layer']})")
+    print(f"throughput: {th['requests_per_sec']:.2f} req/s, "
+          f"{th['tokens_per_sec']:.1f} tok/s ({th['wall_s']:.2f}s)")
+    print(f"latency   : p50 {la['p50']:.1f} ms, p99 {la['p99']:.1f} ms")
+    print(f"parity    : {pa['token_mismatches']} token / "
+          f"{pa['gate_mismatches']} gate mismatches over "
+          f"{pa['requests']} requests, entropy delta "
+          f"{pa['max_entropy_delta']:.2e}")
+    print("adoption  : " + ", ".join(
+        f"tau={s['tau']:.2f}:{s['adoption_ratio']:.2f}"
+        for s in r["adoption_vs_tau"]) + f"  -> {args.out}")
+
+    if args.max_delta > 0:
+        bad = (pa["token_mismatches"] or pa["gate_mismatches"]
+               or pa["max_entropy_delta"] > args.max_delta)
+        if bad:
+            import sys
+            print(f"FAIL: continuous-batching output diverged from the "
+                  f"sequential reference (--max-delta {args.max_delta:g})")
+            sys.exit(1)
+        print(f"parity gate ok (<= {args.max_delta:g})")
+
+
+if __name__ == "__main__":
+    main()

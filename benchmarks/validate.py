@@ -1,6 +1,6 @@
 """§Paper-validation: check the paper's qualitative claims against the
 benchmark results (experiments/artifacts/bench_results.json) and emit the
-markdown section for EXPERIMENTS.md.
+markdown section for docs/EXPERIMENTS.md.
 
 Claims validated (paper §IV):
   C1  Centralized is the upper bound everywhere (Tables III/IV).
@@ -111,7 +111,7 @@ def check(rows):
 def markdown(rows):
     lines = ["\n## §Paper-validation\n",
              "Qualitative reproduction of the paper's claims on the "
-             "synthetic CIFAR/STL stand-ins at reduced scale (see DESIGN.md "
+             "synthetic CIFAR/STL stand-ins at reduced scale (see docs/DESIGN.md "
              "§7; orderings/gaps are the target, not absolute accuracies).\n"]
     # tables
     for table, title in (("table3_homo", "Table III (homogeneous clients)"),

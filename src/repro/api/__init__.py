@@ -1,20 +1,30 @@
-"""Public training API for the Hetero-SplitEE reproduction.
+"""Public training and serving API for the Hetero-SplitEE reproduction.
 
-    from repro.api import TrainSession
+    from repro.api import TrainSession, ServeSession
 
     session = TrainSession.from_config(model, splitee_cfg, opt_cfg,
                                        client_data, batch_size=64)
     session.train(rounds=100, save_every=20, save_dir="ckpt/run1")
 
+    serve = ServeSession.restore("ckpt/run1/ckpt-00000100", model,
+                                 tau=1.5, slots=8, max_len=128)
+    serve.submit(prompt_tokens); results = serve.run()
+
 See docs/API.md.  Three registered engines — ``"reference"``, ``"fused"``,
 ``"spmd"`` — all pure ``TrainState -> TrainState`` executors behind this
 facade; ``engine="auto"`` picks the widest one the session supports.
+``ServeSession`` is the inference sibling: continuous-batching entropy-gated
+decode straight from TrainSession checkpoints.
 """
 from repro.api.engines import (AUTO_ORDER, Engine, SessionContext,  # noqa: F401
                                available_engines, get_engine,
                                register_engine, resolve_engine)
 from repro.api.evaluation import SplitEvaluator, pad_batches  # noqa: F401
 from repro.api.protocol import SplitModel, assert_split_model  # noqa: F401
+from repro.api.serve_session import (ServeResult, ServeSession,  # noqa: F401
+                                     ServeStats, resolve_serve_boundary,
+                                     sequential_reference,
+                                     serve_step_config)
 from repro.api.session import CHECKPOINT_FORMAT, TrainSession  # noqa: F401
 from repro.api.state import TrainState, init_train_state  # noqa: F401
 from repro.api.fused_engine import FusedEngine  # noqa: F401

@@ -116,7 +116,7 @@ class SplitEvaluator:
     def evaluate_adaptive(self, state: TrainState, x, y, tau: float,
                           batch_size: int = 512) -> Dict[str, Any]:
         """Alg. 3 collaborative inference at entropy threshold ``tau``
-        (exit iff H < tau; see DESIGN.md on the paper's sign convention)."""
+        (exit iff H < tau; see docs/DESIGN.md on the paper's sign convention)."""
         sums, n = self._per_client_sums(state, x, y, tau, batch_size)
         return {"acc": [float(s[_ADAPTIVE_OK]) / n for s in sums],
                 "client_ratio": [float(s[_EXITS]) / n for s in sums],

@@ -1,0 +1,558 @@
+"""``ServeSession`` — the inference front door: Alg.-3 entropy-gated
+serving with continuous batching, restored straight from ``TrainSession``
+checkpoints.
+
+Where :class:`~repro.api.session.TrainSession` owns the training half of the
+paper, ``ServeSession`` owns the deployment half (Alg. 3 / Fig. 2): a fixed
+pool of **decode slots** serves a stream of requests, each slot holding one
+request's KV/state cache page and per-slot ``cache_len``.  Requests join a
+free slot (prefill), decode one gated token per tick through a single
+compiled step, and leave when their budget is spent — admission and eviction
+never recompile the decode program.
+
+The gate is the one graph :func:`repro.core.spmd.make_serve_step` builds —
+entropy at the client-boundary exit head, ``exit iff H < tau`` (see
+docs/DESIGN.md §1 for the paper's sign convention) — vmapped over slots so
+every slot carries its own ``cache_len``.  Two exit policies:
+
+  * ``"select"`` (default, paper Fig.-2 measurement mode): every tick
+    computes both the exit and the full path and selects per token —
+    bit-identical to a sequential ``make_serve_step`` run per request
+    (tests/test_serve_session.py asserts exact parity, gate decisions
+    included).
+  * ``"sticky"`` (deployment mode): a request whose gate fires *adopts* the
+    client path — from then on its tokens come from the client sub-network
+    + exit head alone.  On ticks where every occupied slot has adopted, the
+    session runs a client-only program (segments ``0..boundary``), so
+    adopted slots genuinely stop consuming server-side layer work — the
+    compute saving the adoption ratio trades against accuracy.
+
+Checkpoint restore reassembles one coherent full-network parameter tree
+from the ``TrainState`` of a :class:`repro.core.backbone_splitee.
+BackboneSplitModel` run: the serving client's segments + exit head on the
+client side of the cut, its server's segments + LM head beyond it
+(exactly the composed network that client's requests were trained to
+traverse).  The manifest is validated the same way ``TrainSession.restore``
+validates it (kind, format, adapter identity).
+
+    session = ServeSession.restore("ckpt/run1/ckpt-00000100", model,
+                                   tau=1.5, slots=8, max_len=128)
+    session.submit(prompt_tokens, decode_tokens=16)
+    results = session.run()          # list of ServeResult
+
+Sharding rides the same recipe rules training uses:
+``launch.shardings.serve_state_specs`` places the parameter tree and the
+slot-paged cache over a mesh (params per ``ShardingRecipe``, slot dim over
+the batch axes), and the jitted step preserves that placement.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_pytree
+from repro.config import (HeteroProfile, ModelConfig, SplitEEConfig,
+                          TrainConfig)
+from repro.core.losses import softmax_entropy
+from repro.core.spmd import StepConfig, make_serve_step
+from repro.models import frontend as frontend_mod
+from repro.models import heads as heads_mod
+from repro.models.backbone import (backbone_forward, build_plan, init_cache,
+                                   _run_forward)
+from repro.models.common import embed
+
+
+# ---------------------------------------------------------------------------
+# boundary resolution — the single sorted source of truth
+# ---------------------------------------------------------------------------
+
+
+def resolve_serve_boundary(cfg: ModelConfig, boundary: int
+                           ) -> Tuple[Tuple[int, ...], int, float]:
+    """``(exits, cut, skip_frac)`` for gate boundary ``boundary``.
+
+    One derivation feeds all three consumers — the gate head index
+    (``backbone_forward`` emits ``exit_logits`` in sorted-exit order), the
+    split profile, and the reported compute saving — so they can never
+    disagree, whatever order ``cfg.exit_layers`` was written in."""
+    exits = tuple(sorted(cfg.exit_layers))
+    if not exits:
+        raise ValueError(f"{cfg.name}: serving needs exit_layers (the gate "
+                         f"sits at an exit head)")
+    if not 0 <= boundary < len(exits):
+        raise ValueError(f"boundary {boundary} out of range for "
+                         f"{len(exits)} exit boundaries {exits}")
+    cut = exits[boundary]
+    skip_frac = 1.0 - cut / cfg.num_layers
+    return exits, cut, skip_frac
+
+
+def serve_step_config(cfg: ModelConfig, tau: float, boundary: int
+                      ) -> Tuple[StepConfig, int, float]:
+    """The ``StepConfig`` for :func:`make_serve_step` plus ``(cut,
+    skip_frac)``, all derived through :func:`resolve_serve_boundary`."""
+    exits, cut, skip_frac = resolve_serve_boundary(cfg, boundary)
+    profile = HeteroProfile(split_layers=(cut,) * 4)
+    sc = StepConfig(model=cfg,
+                    splitee=SplitEEConfig(profile=profile,
+                                          entropy_threshold=tau),
+                    train=TrainConfig())
+    return sc, cut, skip_frac
+
+
+# ---------------------------------------------------------------------------
+# checkpoint -> full serving parameter tree
+# ---------------------------------------------------------------------------
+
+
+def assemble_serve_params(model, state, boundary: int) -> dict:
+    """One full-network parameter tree from a split ``TrainState``.
+
+    ``model`` is a ``BackboneSplitModel``-shaped adapter (``cfg``, ``plan``,
+    ``full_params``); the serving identity is the first client whose cut
+    boundary equals ``boundary``: its embed/segments/exit head cover layers
+    up to the cut, its server's ``seg{si}``/``head`` cover the rest — the
+    exact composed network that client's requests traversed in training.
+    Exit heads at other boundaries are taken from clients that trained them
+    where present (falling back to the adapter's init values); they are
+    computed by the forward pass but never consulted by the gate."""
+    cfg = model.cfg
+    exits = tuple(sorted(cfg.exit_layers))
+    # a client at boundary b holds segments 0..b, so its boundary is
+    # recoverable from the checkpoint state alone
+    splits = tuple(len(c["trainable"]["segments"]) - 1 for c in state.clients)
+    try:
+        ci = splits.index(boundary)
+    except ValueError:
+        raise ValueError(
+            f"no client in the checkpoint serves boundary {boundary} "
+            f"(cut layer {exits[boundary]}); client boundaries: "
+            f"{sorted(set(splits))}") from None
+    client = state.clients[ci]["trainable"]
+    si_srv = ci if len(state.servers) > 1 else 0
+    server = state.servers[si_srv]["trainable"]
+
+    n_seg = len(model.plan)
+    segments = [client["segments"][si] for si in range(boundary + 1)]
+    for si in range(boundary + 1, n_seg):
+        segments.append(server[f"seg{si}"])
+
+    exit_heads = []
+    for b in range(len(exits)):
+        if b == boundary:
+            exit_heads.append(client["out"])
+            continue
+        owner = next((i for i, sb in enumerate(splits) if sb == b), None)
+        exit_heads.append(state.clients[owner]["trainable"]["out"]
+                          if owner is not None
+                          else model.full_params["exit_heads"][b])
+
+    params = {"embed": client["embed"], "segments": segments,
+              "exit_heads": exit_heads, "head": server["head"]}
+    for key in ("shared_attn", "frontend"):
+        if key in client:
+            params[key] = client[key]
+        elif key in model.full_params:
+            params[key] = model.full_params[key]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# request / result records
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ServeRequest:
+    rid: int
+    prompt: np.ndarray                 # (P,) int32
+    decode_tokens: int
+
+
+@dataclass
+class ServeResult:
+    """One request's served stream.  ``tokens[0]`` is the prefill token
+    (full-path, ungated — there is no boundary decision before the first
+    decode tick); ``tokens[1 + i]`` is the output of gated decode tick
+    ``i`` with decision ``exited[i]`` and gate entropy ``entropy[i]``."""
+    rid: int
+    prompt: np.ndarray
+    tokens: List[int] = field(default_factory=list)
+    exited: List[bool] = field(default_factory=list)
+    entropy: List[float] = field(default_factory=list)
+
+    @property
+    def adoption_ratio(self) -> float:
+        return float(np.mean(self.exited)) if self.exited else 0.0
+
+
+@dataclass
+class ServeStats:
+    requests: int = 0
+    decode_ticks: int = 0
+    tokens: int = 0                    # gated decode tokens served
+    exited: int = 0
+    client_only_ticks: int = 0         # sticky ticks that skipped the server
+    wall_s: float = 0.0
+
+    @property
+    def adoption_ratio(self) -> float:
+        return self.exited / max(1, self.tokens)
+
+
+# ---------------------------------------------------------------------------
+# the session
+# ---------------------------------------------------------------------------
+
+
+class ServeSession:
+    """Continuous-batching entropy-gated decode over a fixed slot pool."""
+
+    def __init__(self, cfg: ModelConfig, params: dict, *, tau: float,
+                 boundary: int = 0, slots: int = 8, max_len: int = 128,
+                 exit_policy: str = "select", mesh=None, recipe=None):
+        if exit_policy not in ("select", "sticky"):
+            raise ValueError(f"unknown exit_policy {exit_policy!r}; "
+                             f"expected 'select' or 'sticky'")
+        self.cfg = cfg
+        self.tau = float(tau)
+        self.boundary = boundary
+        self.slots = slots
+        self.max_len = max_len
+        self.exit_policy = exit_policy
+        self.sc, self.cut, self.skip_frac = serve_step_config(
+            cfg, tau, boundary)
+        self.params = params
+        self.mesh = mesh
+
+        if mesh is not None:
+            from repro.launch.shardings import (resolve_recipe,
+                                                serve_state_specs, to_named)
+            cache0 = init_cache(cfg, slots, max_len, cfg.dtype)
+            specs = serve_state_specs(resolve_recipe(recipe), mesh,
+                                      params, cache0, cfg)
+            self.params = jax.device_put(params,
+                                         to_named(specs["params"], mesh))
+            self._pool = jax.device_put(cache0,
+                                        to_named(specs["cache"], mesh))
+        else:
+            self._pool = init_cache(cfg, slots, max_len, cfg.dtype)
+
+        # stacked-run cache leaves carry a leading layer dim, so the slot
+        # (batch) axis is 1 there and 0 elsewhere — one axes tree drives
+        # vmap, the join scatter, and the in-lane expand/strip
+        axes = cache_slot_axes(cfg)
+        out_axes = {"tokens": 0, "exited": 0, "entropy": 0, "cache": axes}
+        step = make_serve_step(self.sc, boundary=boundary)
+        self._slot_step = jax.jit(jax.vmap(
+            functools.partial(_one_slot, step, cfg, axes),
+            in_axes=(None, 0, axes, 0, None), out_axes=out_axes))
+        self._client_step = jax.jit(jax.vmap(
+            functools.partial(_one_slot_client_only, cfg, boundary, axes),
+            in_axes=(None, 0, axes, 0, None), out_axes=out_axes))
+        self._prefill = jax.jit(functools.partial(_prefill, cfg, max_len))
+        self._join = jax.jit(functools.partial(_join_slot, axes))
+
+        # host-side scheduler state
+        self._queue: deque = deque()
+        self._slot_req: List[Optional[ServeRequest]] = [None] * slots
+        self._slot_res: List[Optional[ServeResult]] = [None] * slots
+        self._slot_left = np.zeros(slots, np.int64)
+        self._slot_sticky = np.zeros(slots, bool)
+        self._active = np.zeros(slots, bool)
+        self._toks = jnp.zeros((slots,), jnp.int32)
+        self._lens = jnp.zeros((slots,), jnp.int32)
+        self._next_rid = 0
+        self._done: List[ServeResult] = []
+        self.stats = ServeStats()
+
+    # -------------------------------------------------------------- restore
+    @classmethod
+    def restore(cls, path: str, model, *, tau: Optional[float] = None,
+                boundary: Optional[int] = None, slots: int = 8,
+                max_len: int = 128, exit_policy: str = "select",
+                mesh=None, recipe=None) -> "ServeSession":
+        """Build a serving session straight from a ``TrainSession``
+        checkpoint (the ``path + '.npz'/'.json'`` pair ``TrainSession.save``
+        writes).  ``model`` must be the adapter the run trained —
+        the manifest's kind, format, and adapter identity are validated
+        before any tensor is read, exactly like ``TrainSession.restore``.
+        ``tau`` defaults to the checkpoint's ``entropy_threshold``;
+        ``boundary`` defaults to the shallowest trained cut."""
+        from repro.api.session import CHECKPOINT_FORMAT, _model_name
+        from repro.api.state import init_train_state
+        from repro.config import OptimizerConfig
+
+        with open(path + ".json") as f:
+            meta = json.load(f)["metadata"]
+        if meta.get("kind") != "train_session":
+            raise ValueError(f"{path} is not a TrainSession checkpoint")
+        if meta.get("format") != CHECKPOINT_FORMAT:
+            raise ValueError(
+                f"{path} has checkpoint format {meta.get('format')!r}; this "
+                f"version reads format {CHECKPOINT_FORMAT}")
+        saved_model = meta.get("model")
+        if saved_model is not None and saved_model != _model_name(model):
+            raise ValueError(
+                f"checkpoint was saved with model {saved_model!r} but "
+                f"restore got {_model_name(model)!r}; the state cannot be "
+                f"served as a different architecture")
+
+        sp = meta["splitee"]
+        splitee_cfg = SplitEEConfig(
+            profile=HeteroProfile(tuple(sp["split_layers"])),
+            strategy=sp["strategy"],
+            server_lr_divisor=sp["server_lr_divisor"],
+            aggregate_every=sp["aggregate_every"],
+            entropy_threshold=sp["entropy_threshold"])
+        opt = dict(meta["optimizer"])
+        opt["state_dtype"] = jnp.dtype(opt["state_dtype"])
+        state = init_train_state(model, splitee_cfg, OptimizerConfig(**opt))
+        state = load_pytree(path, state)
+
+        if boundary is None:
+            boundary = min(model._boundary_of(li)
+                           for li in splitee_cfg.profile.split_layers)
+        params = assemble_serve_params(model, state, boundary)
+        return cls(model.cfg, params,
+                   tau=(sp["entropy_threshold"] if tau is None else tau),
+                   boundary=boundary, slots=slots, max_len=max_len,
+                   exit_policy=exit_policy, mesh=mesh, recipe=recipe)
+
+    # ------------------------------------------------------------ admission
+    def submit(self, prompt: Sequence[int], decode_tokens: int = 16) -> int:
+        """Enqueue one request; returns its id.  The request joins a slot at
+        the next :meth:`step` with one free."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) + 1 + decode_tokens > self.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + decode ({decode_tokens}) tokens "
+                f"exceed the slot page (max_len={self.max_len})")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(ServeRequest(rid, prompt, decode_tokens))
+        return rid
+
+    def _admit(self) -> None:
+        for s in range(self.slots):
+            if self._active[s] or not self._queue:
+                continue
+            req = self._queue.popleft()
+            cache1, tok0, P = self._prefill(self.params,
+                                            jnp.asarray(req.prompt))
+            self._pool = self._join(self._pool, cache1, s)
+            self._toks = self._toks.at[s].set(tok0)
+            self._lens = self._lens.at[s].set(P)
+            self._slot_req[s] = req
+            self._slot_res[s] = ServeResult(req.rid, req.prompt,
+                                            tokens=[int(tok0)])
+            self._slot_left[s] = req.decode_tokens
+            self._slot_sticky[s] = False
+            self._active[s] = True
+
+    # --------------------------------------------------------------- ticks
+    def step(self) -> bool:
+        """One scheduler tick: admit queued requests into free slots, decode
+        one gated token on every occupied slot, evict finished requests.
+        Returns False when queue and slots are both empty."""
+        t0 = time.perf_counter()
+        self._admit()
+        occupied = np.nonzero(self._active)[0]
+        if not len(occupied):
+            return False
+
+        client_only = (self.exit_policy == "sticky"
+                       and bool(self._slot_sticky[occupied].all()))
+        fn = self._client_step if client_only else self._slot_step
+        out = fn(self.params, self._toks, self._pool, self._lens,
+                 jnp.float32(self.tau))
+        self._pool = out["cache"]
+        next_toks = out["tokens"]
+        exited = np.asarray(out["exited"])
+        entropy = np.asarray(out["entropy"], np.float32)
+        toks_host = np.asarray(next_toks)
+
+        adv = jnp.asarray(self._active, jnp.int32)
+        self._lens = self._lens + adv
+        self._toks = jnp.where(jnp.asarray(self._active), next_toks,
+                               self._toks)
+
+        for s in occupied:
+            res = self._slot_res[s]
+            res.tokens.append(int(toks_host[s]))
+            res.exited.append(bool(exited[s]))
+            res.entropy.append(float(entropy[s]))
+            self._slot_sticky[s] |= bool(exited[s])
+            self._slot_left[s] -= 1
+            self.stats.tokens += 1
+            self.stats.exited += int(exited[s])
+            if self._slot_left[s] == 0:
+                self._done.append(res)
+                self.stats.requests += 1
+                self._slot_req[s] = self._slot_res[s] = None
+                self._active[s] = False
+        self.stats.decode_ticks += 1
+        self.stats.client_only_ticks += int(client_only)
+        self.stats.wall_s += time.perf_counter() - t0
+        return bool(self._queue) or bool(self._active.any())
+
+    def run(self) -> List[ServeResult]:
+        """Drain the queue; returns all finished results in completion
+        order (also kept on ``self.results``)."""
+        while self.step():
+            pass
+        return self.results
+
+    @property
+    def results(self) -> List[ServeResult]:
+        return list(self._done)
+
+
+# ---------------------------------------------------------------------------
+# per-slot step bodies (vmapped over the slot pool)
+# ---------------------------------------------------------------------------
+
+
+def cache_slot_axes(cfg: ModelConfig) -> list:
+    """Per-run slot-axis tree matching the ``init_cache`` structure: the
+    slot (batch) dim sits behind the layer-stack dim for stacked runs."""
+    return [[1 if run.length > 1 else 0 for run in seg]
+            for seg in build_plan(cfg)]
+
+
+def _expand_slot(axes, cache):
+    """Re-insert a size-1 slot dim (stripped by vmap) at each run's slot
+    axis, giving the B=1 cache ``backbone_forward`` expects."""
+    return [[jax.tree.map(functools.partial(jnp.expand_dims, axis=ax), runc)
+             for ax, runc in zip(seg_ax, seg_c)]
+            for seg_ax, seg_c in zip(axes, cache)]
+
+
+def _strip_slot(axes, cache):
+    """Inverse of :func:`_expand_slot`."""
+    return [[jax.tree.map(lambda a, ax=ax: jnp.squeeze(a, axis=ax), runc)
+             for ax, runc in zip(seg_ax, seg_c)]
+            for seg_ax, seg_c in zip(axes, cache)]
+
+
+def _one_slot(step, cfg: ModelConfig, axes, params, tok, cache, cache_len,
+              tau):
+    """One decode slot through the full gated serve step.  ``tok`` is the
+    slot's last token (scalar), ``cache`` its page with the slot dim already
+    stripped by vmap, ``cache_len`` its fill scalar."""
+    cache1 = _expand_slot(axes, cache)
+    kw = {}
+    if cfg.cross_attention:
+        kw["enc"] = jnp.zeros((1, cfg.cross_source_len,
+                               frontend_mod.WHISPER_FRAME_DIM), cfg.dtype)
+    out = step(params, tok[None, None], cache1, cache_len, tau=tau, **kw)
+    return {"tokens": jnp.argmax(out["logits"][0, 0], -1).astype(jnp.int32),
+            "exited": out["exited"][0, 0],
+            "entropy": out["entropy"][0, 0],
+            "cache": _strip_slot(axes, out["cache"])}
+
+
+def _one_slot_client_only(cfg: ModelConfig, boundary: int, axes, params,
+                          tok, cache, cache_len, tau):
+    """The sticky-adoption fast path: segments ``0..boundary`` + exit head
+    only — server-side layers do zero work.  Server-segment cache pages go
+    stale, which is sound because an adopted request never offloads again
+    (``ServeSession`` only runs this when every occupied slot has
+    adopted)."""
+    plan = build_plan(cfg)
+    cache1 = _expand_slot(axes, cache)
+    x = embed(params["embed"], tok[None, None]).astype(cfg.dtype)
+    positions = cache_len + jnp.arange(1, dtype=jnp.int32)
+    enc = None
+    if cfg.cross_attention and "frontend" in params:
+        raw = jnp.zeros((1, cfg.cross_source_len,
+                         frontend_mod.WHISPER_FRAME_DIM), cfg.dtype)
+        enc = frontend_mod.project(params["frontend"], raw).astype(cfg.dtype)
+    shared_p = params.get("shared_attn")
+    new_cache = [list(seg) for seg in cache1]
+    for si in range(boundary + 1):
+        for ri, run in enumerate(plan[si]):
+            x, run_c, _ = _run_forward(run, params["segments"][si][ri],
+                                       shared_p, x, positions, cfg,
+                                       cache1[si][ri], cache_len, enc, False)
+            new_cache[si][ri] = run_c
+    e_logits = heads_mod.exit_head(params["exit_heads"][boundary], x, cfg)
+    H = softmax_entropy(e_logits)
+    return {"tokens": jnp.argmax(e_logits[0, 0], -1).astype(jnp.int32),
+            "exited": H[0, 0] < tau,
+            "entropy": H[0, 0],
+            "cache": _strip_slot(axes, new_cache)}
+
+
+def _prefill(cfg: ModelConfig, max_len: int, params, prompt):
+    """Prefill one request at its exact prompt length: ``(cache page
+    (leaves (1, W, ...)), first token, prompt length)``.  Compiles once per
+    distinct prompt length; the decode step itself never recompiles."""
+    kw = {}
+    if cfg.cross_attention:
+        kw["enc"] = jnp.zeros((1, cfg.cross_source_len,
+                               frontend_mod.WHISPER_FRAME_DIM), cfg.dtype)
+    # a fresh page per request: the previous occupant's tokens never leak
+    cache = init_cache(cfg, 1, max_len, cfg.dtype)
+    out = backbone_forward(params, cfg, tokens=prompt[None], cache=cache,
+                           cache_len=jnp.zeros((), jnp.int32), **kw)
+    tok0 = jnp.argmax(out.logits[0, -1], -1).astype(jnp.int32)
+    return out.cache, tok0, jnp.asarray(prompt.shape[0], jnp.int32)
+
+
+def _join_slot(axes, pool, page, slot):
+    """Scatter one prefilled B=1 page into the slot pool at ``slot`` along
+    each run's slot axis (traced index — joining never recompiles)."""
+    def upd(ax):
+        return lambda p, a: jax.lax.dynamic_update_index_in_dim(
+            p, jnp.squeeze(a, axis=ax), slot, ax)
+    return [[jax.tree.map(upd(ax), pool_r, page_r)
+             for ax, pool_r, page_r in zip(seg_ax, seg_p, seg_g)]
+            for seg_ax, seg_p, seg_g in zip(axes, pool, page)]
+
+
+# ---------------------------------------------------------------------------
+# sequential reference (the parity oracle)
+# ---------------------------------------------------------------------------
+
+
+def sequential_reference(cfg: ModelConfig, params: dict,
+                         prompt: Sequence[int], decode_tokens: int, *,
+                         tau: float, boundary: int = 0, max_len: int = 128
+                         ) -> ServeResult:
+    """Serve ONE request alone: B=1 prefill + a raw ``make_serve_step``
+    decode loop — the paper-faithful sequential path the continuous-batching
+    engine must reproduce token-for-token, gate decisions included
+    (tests/test_serve_session.py and serve_bench gate on it)."""
+    sc, _, _ = serve_step_config(cfg, tau, boundary)
+    step = jax.jit(make_serve_step(sc, boundary=boundary))
+    kw = {}
+    if cfg.cross_attention:
+        kw["enc"] = jnp.zeros((1, cfg.cross_source_len,
+                               frontend_mod.WHISPER_FRAME_DIM), cfg.dtype)
+    prompt = np.asarray(prompt, np.int32).reshape(-1)
+    cache = init_cache(cfg, 1, max_len, cfg.dtype)
+    out = backbone_forward(params, cfg, tokens=jnp.asarray(prompt)[None],
+                           cache=cache, cache_len=jnp.zeros((), jnp.int32),
+                           **kw)
+    tok = jnp.argmax(out.logits[0, -1], -1).astype(jnp.int32)
+    cache = out.cache
+    res = ServeResult(rid=-1, prompt=prompt, tokens=[int(tok)])
+    P = len(prompt)
+    for i in range(decode_tokens):
+        o = step(params, tok[None, None], cache,
+                 jnp.asarray(P + i, jnp.int32), tau=jnp.float32(tau), **kw)
+        cache = o["cache"]
+        tok = jnp.argmax(o["logits"][0, 0], -1).astype(jnp.int32)
+        res.tokens.append(int(tok))
+        res.exited.append(bool(o["exited"][0, 0]))
+        res.entropy.append(float(o["entropy"][0, 0]))
+    return res

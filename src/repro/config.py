@@ -165,7 +165,7 @@ class SplitEEConfig:
     strategy: str = "averaging"        # "sequential" | "averaging"
     server_lr_divisor: float = 0.0     # 0 -> auto: N for sequential, 1 for avg
     aggregate_every: int = 1           # rounds between cross-layer aggregations
-    entropy_threshold: float = 1.0     # exit iff H < tau_H  (see DESIGN.md §1)
+    entropy_threshold: float = 1.0     # exit iff H < tau_H  (see docs/DESIGN.md §1)
 
     def resolved_server_lr_divisor(self) -> float:
         if self.server_lr_divisor > 0:

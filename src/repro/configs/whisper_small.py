@@ -2,7 +2,7 @@
 (d_model=768, 12H kv=12, d_ff=3072, vocab=51865, GeLU, biases) with cross
 attention over stubbed encoder states (1500 frames of 768-dim embeddings —
 the conv/mel frontend and the encoder itself are the allowed stub, see
-DESIGN.md §4).  Deviation: RoPE replaces Whisper's learned absolute
+docs/DESIGN.md §4).  Deviation: RoPE replaces Whisper's learned absolute
 positions (TPU-idiomatic; does not affect split/exit semantics).
 [arXiv:2212.04356]"""
 from __future__ import annotations

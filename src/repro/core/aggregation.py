@@ -11,7 +11,7 @@ Three implementations:
     used by the paper-faithful Averaging strategy and by the test oracle).
   * ``masked_mean_over_axis``      — the SPMD collective form: a weighted
     ``psum`` over a mesh axis with per-layer participation masks, used by the
-    production fused step (see core/spmd.py and DESIGN.md §2).
+    production fused step (see core/spmd.py and docs/DESIGN.md §2).
   * ``stacked_cross_layer_aggregate`` — the in-graph form over
     cohort-stacked server models, traceable inside ``lax.scan``; the fused
     engine (repro.api.fused_engine) applies it under a ``lax.cond`` on the traced

@@ -4,7 +4,7 @@ The paper writes confidence C = -H and sweeps tau in [0, 4] with "larger tau
 => more conservative"; since C <= 0 < tau that literal predicate never fires.
 We implement the only consistent reading — **exit iff H < tau_H** — and the
 Fig.-2 benchmark reports the paper's conservativeness axis as
-``tau_paper = H_CAP - tau_H`` (see DESIGN.md §1).
+``tau_paper = H_CAP - tau_H`` (see docs/DESIGN.md §1).
 
 ``AdaptiveInferenceEngine`` is the host-side router used by the serving
 example: it runs the client sub-network, gates each request on exit-head

@@ -1,6 +1,7 @@
 """Fused SPMD Hetero-SplitEE train/serve steps for the production backbone.
 
-This is the *scalable* formulation of the paper (DESIGN.md §2): client groups
+This is the *scalable* formulation of the paper (docs/DESIGN.md §2): client
+groups
 tile the batch (and hence the ``data`` mesh axis); every shard runs the full
 network; the paper's gradient routing appears as per-example stop-gradients
 at the split boundaries (in ``models/backbone.py``), and Eq. (1) cross-layer
@@ -15,7 +16,7 @@ Two gradient modes:
     which is exactly the every-round FedAvg limit of Algorithm 2.
   * ``sum`` (beyond-paper optimized): one backward pass of the summed loss,
     no per-layer renormalization.  Halves backward FLOPs; recorded separately
-    in EXPERIMENTS.md §Perf.
+    in docs/EXPERIMENTS.md §Perf.
 
 The step functions are pure and jit/pjit-friendly; ``launch/dryrun.py`` and
 ``launch/serve.py`` wrap them in ``jax.jit`` with mesh shardings.
@@ -392,18 +393,30 @@ def make_sequential_train_step(sc: StepConfig) -> Callable:
 def make_serve_step(sc: StepConfig, boundary: int = 0) -> Callable:
     """One-token decode step with the entropy gate computed at the client
     boundary.  TPU SPMD computes both the exit and the full path and selects
-    (DESIGN.md §2); the request-routing savings are realized by the batching
-    engine in ``launch/serve.py``."""
-    cfg = sc.model
-    tau = sc.splitee.entropy_threshold
+    (docs/DESIGN.md §2); the request-routing savings are realized by the
+    batching engine (``repro.api.serve_session.ServeSession``, which vmaps
+    this step over its decode slots).
 
-    def serve_step(params, tokens, cache, cache_len, embeds=None, enc=None):
+    ``boundary`` indexes ``sorted(cfg.exit_layers)`` — the order
+    ``backbone_forward`` emits ``exit_logits`` in — so the gate head sits
+    after cut layer ``sorted(cfg.exit_layers)[boundary]``.
+
+    The returned ``serve_step`` accepts an optional runtime ``tau``
+    (defaults to ``sc.splitee.entropy_threshold``); passing it as a traced
+    scalar lets threshold sweeps (the paper's Fig. 2 axis) reuse one
+    compilation."""
+    cfg = sc.model
+    tau_default = sc.splitee.entropy_threshold
+
+    def serve_step(params, tokens, cache, cache_len, embeds=None, enc=None,
+                   tau=None):
+        tau_ = tau_default if tau is None else tau
         out = backbone_forward(params, cfg, tokens=tokens, embeds=embeds,
                                enc=enc, cache=cache, cache_len=cache_len)
         if out.exit_logits:
             e_logits = out.exit_logits[boundary]
             H = softmax_entropy(e_logits)                     # (B, T)
-            exit_now = H < tau
+            exit_now = H < tau_
             final = jnp.where(exit_now[..., None], e_logits, out.logits)
         else:
             H = softmax_entropy(out.logits)

@@ -8,7 +8,7 @@ classes the prototypes crowd the same subspace and accuracy drops — giving a
 CIFAR-10-like "easy" task at 10 classes and a CIFAR-100-like "hard" task at
 100 classes, which is what the paper's claims are *about* (collaboration
 helps more as difficulty grows).  We validate orderings/gaps, not absolute
-accuracies; see EXPERIMENTS.md §Paper-validation.
+accuracies; see docs/EXPERIMENTS.md §Paper-validation.
 
 ``SyntheticLMDataset`` produces token streams with per-sequence affine
 next-token structure (t_{i+1} = (a*t_i + b) mod V on 90%% of steps), which a

@@ -27,7 +27,7 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                   scale: float, block_q: int, block_k: int,
-                  causal: bool, window: Optional[int]):
+                  causal: bool, window: Optional[int], seq_k: int):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -40,11 +40,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     q_start = iq * block_q
     k_start = ik * block_k
-    # block-level skip: entirely above the causal diagonal, or entirely left
-    # of the sliding window.
-    run = jnp.asarray(True)
+    # block-level skip: entirely above the causal diagonal, entirely left of
+    # the sliding window, or entirely inside the key padding.
+    run = jnp.asarray(k_start < seq_k)
     if causal:
-        run = k_start <= q_start + block_q - 1
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
     if window is not None:
         run = jnp.logical_and(run, k_start + block_k > q_start - window + 1)
 
@@ -57,13 +57,15 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                                 preferred_element_type=jnp.float32) * scale
         qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
         kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        # padded keys are masked unconditionally — the causal diagonal only
+        # covers them when Tq == Tk, and non-causal shapes (the ServeSession
+        # decode path, Tq != Tk) have no diagonal at all
+        mask = kpos < seq_k
         if causal:
-            mask = kpos <= qpos
-            if window is not None:
-                mask &= kpos > qpos - window
-            s = jnp.where(mask, s, NEG_INF)
-        elif window is not None:
-            s = jnp.where(kpos > qpos - window, s, NEG_INF)
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
@@ -86,18 +88,23 @@ def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                            causal: bool = True,
                            window: Optional[int] = None,
                            block_q: int = 128, block_k: int = 128,
+                           seq_k: Optional[int] = None,
                            interpret: bool = False) -> jnp.ndarray:
     """q: (B, H, Tq, D); k/v: (B, Hkv, Tk, D), H % Hkv == 0.  Tq/Tk must be
-    multiples of the block sizes (ops.py pads arbitrary shapes)."""
+    multiples of the block sizes (ops.py pads arbitrary shapes); ``seq_k``
+    is the true (pre-padding) key length — keys at ``kpos >= seq_k`` are
+    masked inside the kernel regardless of the causal/window setting."""
     B, H, Tq, D = q.shape
     _, Hkv, Tk, _ = k.shape
     assert H % Hkv == 0 and Tq % block_q == 0 and Tk % block_k == 0
+    seq_k = Tk if seq_k is None else seq_k
+    assert 0 < seq_k <= Tk
     scale = 1.0 / math.sqrt(D)
     grid = (B, H, Tq // block_q, Tk // block_k)
 
     kernel = functools.partial(
         _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
-        causal=causal, window=window)
+        causal=causal, window=window, seq_k=seq_k)
 
     kv_index = lambda b, h, iq, ik: (b, h * Hkv // H, ik, 0)
     return pl.pallas_call(

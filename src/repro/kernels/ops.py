@@ -40,19 +40,12 @@ def flash_attention(q, k, v, *, causal: bool = True,
     qp, pq = _pad_to(q, 2, bq)
     kp, _ = _pad_to(k, 2, bk)
     vp, _ = _pad_to(v, 2, bk)
-    # padded q rows attend only to padded k cols masked inside the kernel via
-    # seq bounds: kernel masks kpos via causal/window vs qpos; padded k rows
-    # are excluded because kernel masks kpos >= Tk is... handled by causal
-    # mask only when causal; guard explicitly by masking padded keys to -inf
-    # through a window trick is unnecessary: we simply slice the output and
-    # padded keys carry zero weight because their scores use zero vectors
-    # only when causal=False — for safety we mask below.
-    if kp.shape[2] != Tk:
-        # force padded keys inert: set them to a large negative via value is
-        # wrong; instead rely on causal mask (padded kpos > any valid qpos)
-        assert causal, "non-causal padding requires explicit key masking"
+    # the kernel masks padded keys (kpos >= Tk) explicitly, so any
+    # causal/window/ragged (Tq != Tk) combination is safe; padded q rows are
+    # garbage but sliced off below
     out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
-                                 block_q=bq, block_k=bk, interpret=interpret)
+                                 block_q=bq, block_k=bk, seq_k=Tk,
+                                 interpret=interpret)
     return out[:, :, :Tq]
 
 

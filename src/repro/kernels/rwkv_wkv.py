@@ -1,6 +1,6 @@
 """Chunked RWKV6 WKV scan (Pallas, TPU target).
 
-TPU adaptation of the Finch CUDA kernel (DESIGN.md §2): instead of one thread
+TPU adaptation of the Finch CUDA kernel (docs/DESIGN.md §2): instead of one thread
 per channel marching token-by-token (GPU-shaped), we process the sequence in
 chunks — quadratic MXU work inside a chunk plus a VMEM-resident recurrent
 state (K x V per head) carried across sequential grid steps.  Per chunk, with

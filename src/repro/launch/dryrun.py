@@ -35,7 +35,7 @@ from repro.models.backbone import backbone_forward
 from repro.optim import adam_init
 
 # ---------------------------------------------------------------------------
-# long-context policy (DESIGN.md §4): SSM/hybrid run natively; dense archs
+# long-context policy (docs/DESIGN.md §4): SSM/hybrid run natively; dense archs
 # get a 4096-token sliding-window variant; whisper is skipped (documented).
 # ---------------------------------------------------------------------------
 LONG_SWA_WINDOW = 4096
@@ -202,7 +202,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
                            "recipe": recipe.scheme if recipe else "greedy"}
     if cfg is None:
         rec["status"] = "skipped"
-        rec["reason"] = "long_500k inapplicable (see DESIGN.md §4)"
+        rec["reason"] = "long_500k inapplicable (see docs/DESIGN.md §4)"
         return rec
     mod = configs_mod.get(arch)
     profile = mod.profile()

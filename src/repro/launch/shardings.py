@@ -429,6 +429,24 @@ def train_state_specs(recipe: ShardingRecipe, mesh, carry: Any,
         treedef, [spec_for(path, leaf) for path, leaf in flat])
 
 
+def serve_state_specs(recipe: ShardingRecipe, mesh, params_abstract: Any,
+                      cache_abstract: Any, cfg: ModelConfig
+                      ) -> Dict[str, Any]:
+    """PartitionSpec trees for a serving session's carry: ``{"params": ...,
+    "cache": ...}``.
+
+    The sibling of :func:`train_state_specs` for inference
+    (``repro.api.serve_session.ServeSession``): the full-network parameter
+    tree gets the recipe's TP/FSDP/expert rules via :func:`param_specs`
+    (one rule set for training and serving — a recipe tuned in the §Perf
+    loop carries over unchanged), and the slot-paged decode cache gets
+    :func:`cache_specs` — its leading slot dim is the cache batch dim, so
+    decode slots spread over the batch axes and the KV window over the TP
+    axis exactly like a training-time decode cache."""
+    return {"params": param_specs(params_abstract, cfg, mesh, recipe),
+            "cache": cache_specs(cache_abstract, cfg, mesh, recipe)}
+
+
 def stage_batch_spec(recipe: ShardingRecipe, mesh, lane_count: int,
                      batch: int) -> P:
     """Spec for one cohort's pre-staged ``[rounds, local_epochs, E, B, ...]``

@@ -11,7 +11,7 @@ HLO O(#runs) instead of O(#layers) (94-layer Qwen3-MoE compiles as a handful
 of scans).  Layers of kind ``shared_attn`` (Zamba2's globally-shared
 attention block) reference one top-level parameter set and are unrolled.
 
-Hetero-SplitEE semantics (DESIGN.md §2)
+Hetero-SplitEE semantics (docs/DESIGN.md §2)
 ---------------------------------------
 ``split_ids`` assigns every example the *boundary index* of its client's cut
 layer.  At boundary ``b`` the residual stream is replaced by

@@ -1,4 +1,4 @@
-"""Stub modality frontends (the one allowed carve-out, see DESIGN.md §4).
+"""Stub modality frontends (the one allowed carve-out, see docs/DESIGN.md §4).
 
 ``input_specs`` for audio/VLM architectures hands the backbone *precomputed*
 frame/patch embeddings of the right shape; this module contributes only the

@@ -2,7 +2,7 @@
 
 State dtype is configurable: fp32 (default) or bf16 for the 100B+ assigned
 architectures where optimizer memory dominates the HBM budget (see
-EXPERIMENTS.md §Dry-run).
+docs/EXPERIMENTS.md §Dry-run).
 """
 from __future__ import annotations
 

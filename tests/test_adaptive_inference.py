@@ -1,0 +1,97 @@
+"""Host-side adaptive router (``core.inference.AdaptiveInferenceEngine``,
+paper Alg. 3): all-exit, none-exit, and pad-bucket remainder paths."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.inference import (H_CAP, AdaptiveInferenceEngine,
+                                  exit_decision, paper_tau_to_entropy)
+
+N_CLASSES = 8
+
+
+def _logits(confident: np.ndarray) -> np.ndarray:
+    """Per-row exit logits: sharp (low entropy, argmax = row % C) where
+    ``confident``, uniform (H = ln C) elsewhere."""
+    n = len(confident)
+    out = np.zeros((n, N_CLASSES), np.float32)
+    for i, c in enumerate(confident):
+        if c:
+            out[i, i % N_CLASSES] = 20.0
+    return out
+
+
+class _Counter:
+    """server_fn stub: records call batch sizes, predicts class 7."""
+
+    def __init__(self):
+        self.batches = []
+
+    def __call__(self, h):
+        self.batches.append(int(h.shape[0]))
+        out = np.zeros((h.shape[0], N_CLASSES), np.float32)
+        out[:, 7] = 5.0
+        return jnp.asarray(out)
+
+
+def _engine(confident, tau=1.0, pad_bucket=8):
+    conf = np.asarray(confident, bool)
+    server = _Counter()
+    eng = AdaptiveInferenceEngine(
+        client_fn=lambda x: (x, jnp.asarray(_logits(conf))),
+        server_fn=server, tau=tau, pad_bucket=pad_bucket)
+    return eng, server, conf
+
+
+def test_all_exit_never_calls_server():
+    eng, server, conf = _engine([True] * 6)
+    preds = eng(np.zeros((6, 4), np.float32))
+    assert server.batches == []
+    np.testing.assert_array_equal(preds, np.arange(6) % N_CLASSES)
+    assert eng.stats.client_ratio == 1.0 and eng.stats.exited == 6
+
+
+def test_none_exit_offloads_everything():
+    eng, server, _ = _engine([False] * 5, pad_bucket=8)
+    preds = eng(np.zeros((5, 4), np.float32))
+    assert server.batches == [8]        # 5 requests padded to one bucket
+    np.testing.assert_array_equal(preds, np.full(5, 7))
+    assert eng.stats.client_ratio == 0.0
+    # uniform logits: mean entropy is ln(C)
+    assert eng.stats.mean_entropy == pytest.approx(np.log(N_CLASSES),
+                                                   abs=1e-5)
+
+
+def test_pad_bucket_remainder_mixed_batch():
+    """11 offloads with bucket 4 -> server sees 12 rows, padding rows are
+    discarded and exited rows keep their client predictions."""
+    conf = np.arange(16) % 3 == 0       # 6 exit, 10 offload
+    eng, server, _ = _engine(conf, pad_bucket=4)
+    preds = eng(np.zeros((16, 4), np.float32))
+    assert server.batches == [12]       # ceil(10 / 4) * 4
+    np.testing.assert_array_equal(preds[conf], np.nonzero(conf)[0] % N_CLASSES)
+    np.testing.assert_array_equal(preds[~conf], 7)
+    assert eng.stats.exited == 6 and eng.stats.total == 16
+
+
+def test_exact_bucket_multiple_is_not_padded():
+    eng, server, _ = _engine([False] * 8, pad_bucket=4)
+    eng(np.zeros((8, 4), np.float32))
+    assert server.batches == [8]
+
+
+def test_stats_accumulate_across_calls():
+    eng, server, _ = _engine([True, False, True, False], pad_bucket=2)
+    for _ in range(3):
+        eng(np.zeros((4, 4), np.float32))
+    assert eng.stats.total == 12 and eng.stats.exited == 6
+    assert eng.stats.client_ratio == 0.5
+    assert server.batches == [2, 2, 2]
+
+
+def test_exit_decision_and_paper_tau_mapping():
+    logits = jnp.asarray(_logits(np.array([True, False])))
+    assert exit_decision(logits, 1.0).tolist() == [True, False]
+    # conservativeness knob: tau_paper = H_CAP - tau_H (docs/DESIGN.md §1)
+    assert paper_tau_to_entropy(0.0) == H_CAP
+    assert paper_tau_to_entropy(H_CAP) == 0.0

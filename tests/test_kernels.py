@@ -92,3 +92,88 @@ def test_rwkv_wkv_bf16_inputs():
     y = rwkv_wkv(r, k, v, lw, u, chunk=16, interpret=True)
     assert y.shape == (B, T, H, K)
     assert np.isfinite(np.asarray(y, np.float32)).all()
+
+
+@pytest.mark.parametrize("B,H,Hkv,Tq,Tk,D,causal", [
+    (1, 2, 1, 1, 33, 32, False),    # non-causal single-query decode
+    (2, 4, 2, 7, 40, 16, False),    # non-causal ragged prefill
+    (1, 2, 2, 40, 24, 16, False),   # Tq > Tk
+    (2, 2, 1, 5, 64, 32, True),     # causal ragged (decode with history)
+])
+def test_flash_attention_ragged(B, H, Hkv, Tq, Tk, D, causal):
+    """Regression: ops.flash_attention used to assert ``causal`` whenever it
+    padded keys; the kernel now masks ``kpos >= Tk`` itself, so non-causal
+    and ragged (Tq != Tk) shapes must match the oracle too."""
+    q = jnp.array(RNG.normal(size=(B, H, Tq, D)), jnp.float32)
+    k = jnp.array(RNG.normal(size=(B, Hkv, Tk, D)), jnp.float32)
+    v = jnp.array(RNG.normal(size=(B, Hkv, Tk, D)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=16, block_k=16,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-4)
+
+
+def test_flash_attention_padded_keys_ignored():
+    """Keys past ``seq_k`` must contribute nothing: growing the key padding
+    cannot change the output."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+    B, H, Tk, D = 1, 2, 20, 16
+    q = jnp.array(RNG.normal(size=(B, H, 1, D)), jnp.float32)
+    k = jnp.array(RNG.normal(size=(B, H, Tk, D)), jnp.float32)
+    v = jnp.array(RNG.normal(size=(B, H, Tk, D)), jnp.float32)
+    pad = [(0, 0), (0, 0), (0, 12), (0, 0)]
+    out_p = flash_attention_pallas(
+        jnp.pad(q, [(0, 0), (0, 0), (0, 15), (0, 0)]),
+        jnp.pad(k, pad, constant_values=9.0),
+        jnp.pad(v, pad, constant_values=9.0),
+        causal=False, block_q=16, block_k=16, seq_k=Tk, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out_p[:, :, :1]), np.asarray(ref),
+                               atol=2e-5, rtol=2e-4)
+
+
+@pytest.mark.parametrize("B,V,block_v", [
+    (8, 300, 128),      # vocab tail: 300 = 2*128 + 44
+    (4, 128, 128),      # exact multiple
+    (6, 512, 2048),     # single block wider than V
+])
+def test_entropy_exit_matches_softmax_entropy(B, V, block_v):
+    """The Pallas gate must agree with ``core.losses.softmax_entropy`` — the
+    definition the serve gate uses — including on non-multiple-of-block_v
+    vocab tails."""
+    from repro.core.losses import softmax_entropy
+    x = jnp.array(RNG.normal(size=(B, V)) * 2, jnp.float32)
+    tau = 0.6 * np.log(V)
+    H, ex = entropy_exit(x, float(tau), block_v=block_v, interpret=True)
+    Hr = softmax_entropy(x)
+    np.testing.assert_allclose(np.asarray(H), np.asarray(Hr), atol=1e-4,
+                               rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ex),
+                                  np.asarray(Hr) < float(tau))
+
+
+def test_entropy_exit_agrees_with_serve_gate():
+    """H < tau decisions from the kernel match ``make_serve_step``'s in-graph
+    gate on real exit-head logits."""
+    from repro import configs as configs_mod
+    from repro.api.serve_session import serve_step_config
+    from repro.core.spmd import make_serve_step
+    from repro.models.backbone import init_backbone
+
+    cfg = configs_mod.get("glm4-9b").smoke()
+    tau = 0.9 * float(np.log(cfg.vocab_size))
+    sc, _, _ = serve_step_config(cfg, tau=tau, boundary=0)
+    params = init_backbone(jax.random.PRNGKey(0), cfg)
+    tokens = jnp.asarray(RNG.integers(0, cfg.vocab_size, (3, 4)), jnp.int32)
+    got = make_serve_step(sc, boundary=0)(params, tokens, None, None)
+
+    from repro.models.backbone import backbone_forward
+    e_logits = backbone_forward(params, cfg, tokens=tokens).exit_logits[0]
+    B, T, V = e_logits.shape
+    H, ex = entropy_exit(e_logits.reshape(B * T, V), tau, interpret=True)
+    np.testing.assert_allclose(np.asarray(H).reshape(B, T),
+                               np.asarray(got["entropy"]), atol=1e-4,
+                               rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ex).reshape(B, T),
+                                  np.asarray(got["exited"]))

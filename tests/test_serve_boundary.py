@@ -1,0 +1,102 @@
+"""Regression: the ``--boundary`` serve path derives the gate head, the
+split profile, and the reported cut from ONE sorted source.
+
+The seed ``launch/serve.py`` hardcoded the profile to
+``exit_layers[0]`` while the gate indexed ``exit_logits[boundary]``
+(sorted order) and the printed cut used ``sorted(exit_layers)[boundary]``
+— three different layers for unsorted ``exit_layers`` or ``--boundary >
+0``.  These tests pin the single-source derivation
+(``repro.api.serve_session.resolve_serve_boundary`` /
+``serve_step_config``) on a config whose ``exit_layers`` are deliberately
+written out of order.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as configs_mod
+from repro.api.serve_session import (resolve_serve_boundary,
+                                     serve_step_config)
+from repro.core.losses import softmax_entropy
+from repro.core.spmd import make_serve_step
+from repro.models.backbone import backbone_forward, init_backbone
+
+
+@pytest.fixture(scope="module")
+def unsorted_cfg():
+    """A smoke config whose exit_layers are written in REVERSED order —
+    the case the seed serve script silently mis-handled."""
+    cfg = configs_mod.get("glm4-9b").smoke()
+    exits = tuple(sorted(cfg.exit_layers))
+    assert len(exits) >= 2
+    return cfg.with_(exit_layers=tuple(reversed(exits)))
+
+
+@pytest.mark.parametrize("boundary", [0, 1])
+def test_gate_head_profile_and_report_agree(unsorted_cfg, boundary):
+    """gate head == profile cut == reported cut, for every boundary, on an
+    unsorted-exit config."""
+    cfg = unsorted_cfg
+    exits, cut, skip_frac = resolve_serve_boundary(cfg, boundary)
+    assert exits == tuple(sorted(cfg.exit_layers))
+    assert cut == exits[boundary]                       # reported cut
+    sc, cut2, skip2 = serve_step_config(cfg, tau=2.0, boundary=boundary)
+    assert cut2 == cut and skip2 == skip_frac
+    # the profile every consumer receives is built from the same cut
+    assert set(sc.splitee.profile.split_layers) == {cut}
+    assert skip_frac == pytest.approx(1.0 - cut / cfg.num_layers)
+
+
+@pytest.mark.parametrize("boundary", [0, 1])
+def test_gate_entropy_comes_from_the_sorted_head(unsorted_cfg, boundary):
+    """The serve step's gate entropy equals the entropy of
+    ``exit_logits[boundary]`` in backbone emission (= sorted) order — the
+    head after the reported cut layer, not after ``exit_layers[boundary]``
+    as written in the config."""
+    cfg = unsorted_cfg
+    sc, cut, _ = serve_step_config(cfg, tau=2.0, boundary=boundary)
+    params = init_backbone(jax.random.PRNGKey(0), cfg)
+    step = make_serve_step(sc, boundary=boundary)
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 5)),
+        jnp.int32)
+    out = backbone_forward(params, cfg, tokens=tokens)
+    got = step(params, tokens, None, None)
+    np.testing.assert_allclose(
+        np.asarray(got["entropy"]),
+        np.asarray(softmax_entropy(out.exit_logits[boundary])), atol=1e-5)
+    # heads at different boundaries genuinely disagree, so the assertion
+    # above discriminates
+    other = softmax_entropy(out.exit_logits[1 - boundary])
+    assert not np.allclose(np.asarray(got["entropy"]), np.asarray(other),
+                           atol=1e-5)
+
+
+def test_bad_boundary_rejected(unsorted_cfg):
+    with pytest.raises(ValueError, match="out of range"):
+        resolve_serve_boundary(unsorted_cfg, 2)
+    with pytest.raises(ValueError, match="out of range"):
+        resolve_serve_boundary(unsorted_cfg, -1)
+
+
+def test_no_exit_layers_rejected(unsorted_cfg):
+    with pytest.raises(ValueError, match="exit_layers"):
+        resolve_serve_boundary(unsorted_cfg.with_(exit_layers=()), 0)
+
+
+def test_serve_cli_reports_consistent_cut(unsorted_cfg, capsys):
+    """launch/serve.py main() prints the same cut the gate uses, via the
+    shared helper (no separate derivation to drift)."""
+    import sys
+    from unittest import mock
+    from repro.launch import serve as serve_cli
+
+    argv = ["serve", "--arch", "glm4-9b", "--requests", "2", "--slots", "2",
+            "--prompt-len", "4", "--decode-tokens", "2", "--boundary", "1"]
+    with mock.patch.object(sys, "argv", argv):
+        serve_cli.main()
+    out = capsys.readouterr().out
+    exits = sorted(configs_mod.get("glm4-9b").smoke().exit_layers)
+    assert f"(cut layer {exits[1]}/" in out
