@@ -24,6 +24,7 @@ from repro.api.protocol import SplitModel, assert_split_model  # noqa: F401
 from repro.api.serve_session import (ServeResult, ServeSession,  # noqa: F401
                                      ServeStats, resolve_serve_boundary,
                                      sequential_reference,
+                                     sequential_sticky_reference,
                                      serve_step_config)
 from repro.api.session import CHECKPOINT_FORMAT, TrainSession  # noqa: F401
 from repro.api.state import TrainState, init_train_state  # noqa: F401

@@ -25,7 +25,13 @@ every slot carries its own ``cache_len``.  Two exit policies:
     + exit head alone.  On ticks where every occupied slot has adopted, the
     session runs a client-only program (segments ``0..boundary``), so
     adopted slots genuinely stop consuming server-side layer work — the
-    compute saving the adoption ratio trades against accuracy.
+    compute saving the adoption ratio trades against accuracy.  On mixed
+    ticks (a fresh request admitted next to adopted slots) the full step
+    runs with the per-slot sticky mask forcing adopted slots' gates open
+    (``tau = +inf``), so they still take the exit-head token — which
+    depends only on their client-layer caches, kept coherent by every
+    policy path — and the server cache pages left stale by client-only
+    ticks are never consulted for output.
 
 Checkpoint restore reassembles one coherent full-network parameter tree
 from the ``TrainState`` of a :class:`repro.core.backbone_splitee.
@@ -254,10 +260,10 @@ class ServeSession:
         step = make_serve_step(self.sc, boundary=boundary)
         self._slot_step = jax.jit(jax.vmap(
             functools.partial(_one_slot, step, cfg, axes),
-            in_axes=(None, 0, axes, 0, None), out_axes=out_axes))
+            in_axes=(None, 0, axes, 0, None, 0), out_axes=out_axes))
         self._client_step = jax.jit(jax.vmap(
             functools.partial(_one_slot_client_only, cfg, boundary, axes),
-            in_axes=(None, 0, axes, 0, None), out_axes=out_axes))
+            in_axes=(None, 0, axes, 0, None, 0), out_axes=out_axes))
         self._prefill = jax.jit(functools.partial(_prefill, cfg, max_len))
         self._join = jax.jit(functools.partial(_join_slot, axes))
 
@@ -332,6 +338,9 @@ class ServeSession:
         """Enqueue one request; returns its id.  The request joins a slot at
         the next :meth:`step` with one free."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if decode_tokens < 1:
+            raise ValueError(f"decode_tokens must be >= 1, got "
+                             f"{decode_tokens}")
         if len(prompt) + 1 + decode_tokens > self.max_len:
             raise ValueError(
                 f"prompt ({len(prompt)}) + decode ({decode_tokens}) tokens "
@@ -372,8 +381,14 @@ class ServeSession:
         client_only = (self.exit_policy == "sticky"
                        and bool(self._slot_sticky[occupied].all()))
         fn = self._client_step if client_only else self._slot_step
+        # under the sticky policy adopted slots carry their mask into the
+        # step: the full path forces their gate open so the exit head is
+        # selected even when client-only ticks left server pages stale
+        sticky = jnp.asarray(self._slot_sticky
+                             if self.exit_policy == "sticky"
+                             else np.zeros(self.slots, bool))
         out = fn(self.params, self._toks, self._pool, self._lens,
-                 jnp.float32(self.tau))
+                 jnp.float32(self.tau), sticky)
         self._pool = out["cache"]
         next_toks = out["tokens"]
         exited = np.asarray(out["exited"])
@@ -394,7 +409,7 @@ class ServeSession:
             self._slot_left[s] -= 1
             self.stats.tokens += 1
             self.stats.exited += int(exited[s])
-            if self._slot_left[s] == 0:
+            if self._slot_left[s] <= 0:
                 self._done.append(res)
                 self.stats.requests += 1
                 self._slot_req[s] = self._slot_res[s] = None
@@ -444,16 +459,25 @@ def _strip_slot(axes, cache):
 
 
 def _one_slot(step, cfg: ModelConfig, axes, params, tok, cache, cache_len,
-              tau):
+              tau, sticky):
     """One decode slot through the full gated serve step.  ``tok`` is the
     slot's last token (scalar), ``cache`` its page with the slot dim already
-    stripped by vmap, ``cache_len`` its fill scalar."""
+    stripped by vmap, ``cache_len`` its fill scalar.
+
+    ``sticky`` (scalar bool, always False under the ``"select"`` policy)
+    forces the gate open (``tau = +inf``) for a slot that already adopted
+    the client path: its token then comes from the exit head, which reads
+    only the client-layer caches — coherent across both policy paths — so
+    server cache pages left stale by earlier client-only ticks are never
+    consulted for output (they are rewritten here, but an adopted slot
+    never selects the full path again)."""
     cache1 = _expand_slot(axes, cache)
     kw = {}
     if cfg.cross_attention:
         kw["enc"] = jnp.zeros((1, cfg.cross_source_len,
                                frontend_mod.WHISPER_FRAME_DIM), cfg.dtype)
-    out = step(params, tok[None, None], cache1, cache_len, tau=tau, **kw)
+    tau_eff = jnp.where(sticky, jnp.float32(jnp.inf), tau)
+    out = step(params, tok[None, None], cache1, cache_len, tau=tau_eff, **kw)
     return {"tokens": jnp.argmax(out["logits"][0, 0], -1).astype(jnp.int32),
             "exited": out["exited"][0, 0],
             "entropy": out["entropy"][0, 0],
@@ -461,12 +485,15 @@ def _one_slot(step, cfg: ModelConfig, axes, params, tok, cache, cache_len,
 
 
 def _one_slot_client_only(cfg: ModelConfig, boundary: int, axes, params,
-                          tok, cache, cache_len, tau):
+                          tok, cache, cache_len, tau, sticky):
     """The sticky-adoption fast path: segments ``0..boundary`` + exit head
-    only — server-side layers do zero work.  Server-segment cache pages go
-    stale, which is sound because an adopted request never offloads again
-    (``ServeSession`` only runs this when every occupied slot has
-    adopted)."""
+    only — server-side layers do zero work.  ``ServeSession`` runs this
+    only on ticks where every occupied slot has adopted.  Server-segment
+    cache pages go stale, which is sound because an adopted slot's output
+    never depends on them again: on later mixed ticks (new admissions) the
+    scheduler passes the slot's ``sticky`` flag to :func:`_one_slot`, which
+    forces the gate open so the exit head — fed only by the client-layer
+    caches this path keeps coherent — is always selected."""
     plan = build_plan(cfg)
     cache1 = _expand_slot(axes, cache)
     x = embed(params["embed"], tok[None, None]).astype(cfg.dtype)
@@ -486,8 +513,10 @@ def _one_slot_client_only(cfg: ModelConfig, boundary: int, axes, params,
             new_cache[si][ri] = run_c
     e_logits = heads_mod.exit_head(params["exit_heads"][boundary], x, cfg)
     H = softmax_entropy(e_logits)
+    # every occupied slot here has adopted; report the token as exited
+    # (it comes from the exit head) regardless of the instantaneous H
     return {"tokens": jnp.argmax(e_logits[0, 0], -1).astype(jnp.int32),
-            "exited": H[0, 0] < tau,
+            "exited": sticky | (H[0, 0] < tau),
             "entropy": H[0, 0],
             "cache": _strip_slot(axes, new_cache)}
 
@@ -555,4 +584,46 @@ def sequential_reference(cfg: ModelConfig, params: dict,
         res.tokens.append(int(tok))
         res.exited.append(bool(o["exited"][0, 0]))
         res.entropy.append(float(o["entropy"][0, 0]))
+    return res
+
+
+def sequential_sticky_reference(cfg: ModelConfig, params: dict,
+                                prompt: Sequence[int], decode_tokens: int,
+                                *, tau: float, boundary: int = 0,
+                                max_len: int = 128) -> ServeResult:
+    """Serve ONE request alone under the sticky policy: after the first
+    gate fire every later tick runs with the gate forced open
+    (``tau = +inf``), so all remaining tokens come from the exit head —
+    exactly the adoption rule ``ServeSession`` applies per slot.  Unlike
+    the batched engine this loop computes the full path every tick, so
+    every cache page stays coherent; matching it token-for-token is the
+    proof that the engine's stale server pages never leak into a sticky
+    slot's stream (tests/test_serve_session.py gates on it across
+    mid-stream admissions)."""
+    sc, _, _ = serve_step_config(cfg, tau, boundary)
+    step = jax.jit(make_serve_step(sc, boundary=boundary))
+    kw = {}
+    if cfg.cross_attention:
+        kw["enc"] = jnp.zeros((1, cfg.cross_source_len,
+                               frontend_mod.WHISPER_FRAME_DIM), cfg.dtype)
+    prompt = np.asarray(prompt, np.int32).reshape(-1)
+    cache = init_cache(cfg, 1, max_len, cfg.dtype)
+    out = backbone_forward(params, cfg, tokens=jnp.asarray(prompt)[None],
+                           cache=cache, cache_len=jnp.zeros((), jnp.int32),
+                           **kw)
+    tok = jnp.argmax(out.logits[0, -1], -1).astype(jnp.int32)
+    cache = out.cache
+    res = ServeResult(rid=-1, prompt=prompt, tokens=[int(tok)])
+    P = len(prompt)
+    sticky = False
+    for i in range(decode_tokens):
+        tau_i = jnp.float32(jnp.inf) if sticky else jnp.float32(tau)
+        o = step(params, tok[None, None], cache,
+                 jnp.asarray(P + i, jnp.int32), tau=tau_i, **kw)
+        cache = o["cache"]
+        tok = jnp.argmax(o["logits"][0, 0], -1).astype(jnp.int32)
+        res.tokens.append(int(tok))
+        res.exited.append(bool(o["exited"][0, 0]))
+        res.entropy.append(float(o["entropy"][0, 0]))
+        sticky = sticky or res.exited[-1]
     return res

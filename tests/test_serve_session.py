@@ -12,7 +12,10 @@ Coverage (the PR's acceptance gates):
   * parameter reassembly picks the requested boundary's client/server pair
     and refuses boundaries no client trained;
   * the sticky exit policy serves client-only ticks once every active slot
-    has adopted;
+    has adopted, and adopted slots keep serving exit-head tokens (matching
+    the coherent-cache ``sequential_sticky_reference`` oracle) even when
+    later admissions force mixed full-step ticks over their stale server
+    cache pages;
   * ``serve_state_specs`` shards params by the recipe rules and the
     slot-paged cache over the mesh batch axes.
 """
@@ -25,7 +28,8 @@ import jax.numpy as jnp
 from repro import configs as configs_mod
 from repro.api import TrainSession
 from repro.api.serve_session import (ServeSession, assemble_serve_params,
-                                     sequential_reference)
+                                     sequential_reference,
+                                     sequential_sticky_reference)
 from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
 from repro.core.backbone_splitee import BackboneSplitModel
 from repro.data.pipeline import ClientPartitioner
@@ -138,6 +142,15 @@ def test_submit_rejects_overlong_request(smoke_cfg, params):
         sess.submit(np.zeros(6, np.int32), decode_tokens=4)
 
 
+def test_submit_rejects_nonpositive_decode_budget(smoke_cfg, params):
+    """decode_tokens <= 0 would never hit the eviction check and hang
+    run() on an immortal slot."""
+    sess = ServeSession(smoke_cfg, params, tau=TAU, slots=1, max_len=8)
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match="decode_tokens"):
+            sess.submit(np.zeros(2, np.int32), decode_tokens=bad)
+
+
 def test_bad_exit_policy_rejected(smoke_cfg, params):
     with pytest.raises(ValueError, match="exit_policy"):
         ServeSession(smoke_cfg, params, tau=TAU, exit_policy="eager")
@@ -162,6 +175,42 @@ def test_sticky_policy_serves_client_only_ticks(smoke_cfg, params):
     assert sess.stats.client_only_ticks > 0
     for r in results:
         assert all(r.exited)
+
+
+def test_sticky_adoption_survives_later_admissions(smoke_cfg, params):
+    """REVIEW regression: with more requests than slots, a slot that adopts
+    goes through client-only ticks (server cache pages go stale) and is then
+    dragged back into the full vmapped step when a new request joins a freed
+    slot.  The sticky mask must keep it on the exit head — per-request
+    streams must match the coherent-cache sequential sticky oracle exactly,
+    even on ticks where the gate would not re-fire on its own."""
+    cfg = smoke_cfg
+    # seed chosen so a slot adopts, goes client-only, and then on a later
+    # mixed full-step tick its natural gate would NOT re-fire — the exact
+    # divergence the sticky mask guards (verified to fail without it)
+    prompts = _prompts(cfg, 4, seed=9)
+    decodes = [8, 2, 6, 5]
+    # tau at the median probe entropy: gates fire on some ticks and not
+    # others, so adopted and un-adopted slots coexist on full-step ticks
+    probe = sequential_reference(cfg, params, prompts[0], 6, tau=0.0,
+                                 boundary=0, max_len=24)
+    tau = float(np.median(probe.entropy))
+    sess = ServeSession(cfg, params, tau=tau, boundary=0, slots=2,
+                        max_len=24, exit_policy="sticky")
+    for p, d in zip(prompts, decodes):
+        sess.submit(p, decode_tokens=d)
+    results = sess.run()
+    assert len(results) == len(prompts)
+    flags = [f for r in results for f in r.exited]
+    assert any(flags) and not all(flags)      # the scenario mixes paths
+    by_rid = {r.rid: r for r in results}
+    for rid, (p, d) in enumerate(zip(prompts, decodes)):
+        ref = sequential_sticky_reference(cfg, params, p, d, tau=tau,
+                                          boundary=0, max_len=24)
+        got = by_rid[rid]
+        assert got.tokens == ref.tokens, f"request {rid} tokens diverged"
+        assert got.exited == ref.exited, f"request {rid} adoption diverged"
+        np.testing.assert_allclose(got.entropy, ref.entropy, atol=1e-4)
 
 
 def test_sticky_tokens_match_select_until_first_exit(smoke_cfg, params):
