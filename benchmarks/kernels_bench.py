@@ -1,11 +1,27 @@
-"""Kernel parity + latency micro-bench.  On this CPU container the Pallas
-kernels run in interpret mode, so wall-times are NOT TPU estimates — the
-benchmark's purpose is (a) parity vs the jnp oracle on bench-scale shapes and
-(b) a regression guard on call overhead."""
+"""Kernel parity + latency bench, micro AND model-layer.
+
+On this CPU container the Pallas kernels run in interpret mode, so
+wall-times are NOT TPU estimates — the benchmark's purpose is (a) parity
+vs the jnp oracle on bench-scale shapes, (b) a regression guard on call
+overhead, and (c) the **dispatch leg**: the full model layer run end to end
+under ``kernels="pallas"`` vs ``kernels="ref"`` (``repro.kernels.dispatch``
+routes the GQA contraction, the RWKV6 wkv recurrence, and the serve-step
+entropy gate), with the pallas/ref deltas gated by ``--max-delta`` — the
+``kernels-smoke`` CI job.
+
+  PYTHONPATH=src python -m benchmarks.kernels_bench --max-delta 1e-3
+
+writes ``BENCH_kernels.json`` and exits non-zero when any routed site
+diverges past the gate.  ``run()`` (the micro rows) also feeds
+``benchmarks.run``.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
-from typing import List
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +30,9 @@ import numpy as np
 from repro.kernels.ops import entropy_exit, flash_attention, rwkv_wkv
 from repro.kernels.ref import (entropy_exit_ref, flash_attention_ref,
                                rwkv_wkv_ref)
+
+#: archs for the model-layer leg: one attention-routed, one wkv-routed
+MODEL_ARCHS = ("glm4-9b", "rwkv6-3b")
 
 
 def _time(fn, *args, reps=3, **kw):
@@ -25,6 +44,7 @@ def _time(fn, *args, reps=3, **kw):
 
 
 def run() -> List[dict]:
+    """Micro rows: one kernel per row, interpret-mode Pallas vs oracle."""
     rng = np.random.default_rng(0)
     rows = []
 
@@ -63,3 +83,132 @@ def run() -> List[dict]:
                  "us_per_call": round(t, 1),
                  "max_err": float(jnp.abs(y - yr).max())})
     return rows
+
+
+def run_model_level(archs=MODEL_ARCHS, batch: int = 2, seq_len: int = 16,
+                    tau_frac: float = 0.9, seed: int = 0) -> List[dict]:
+    """The dispatch leg: the routed call sites exercised through the real
+    model layer.  Per arch, one jitted ``backbone_forward`` under each
+    backend (fwd timing + logits delta) plus a decode serve-step tick
+    (gate entropy delta + gate agreement) on the first arch."""
+    from repro import configs as configs_mod
+    from repro.api.serve_session import serve_step_config
+    from repro.core.spmd import make_serve_step
+    from repro.models.backbone import backbone_forward, init_backbone
+
+    rows = []
+    for arch in archs:
+        base = configs_mod.get(arch).smoke()
+        params = init_backbone(jax.random.PRNGKey(seed), base)
+        toks = jax.random.randint(jax.random.PRNGKey(seed + 1),
+                                  (batch, seq_len), 0, base.vocab_size)
+        t_us, logits = {}, {}
+        for kn in ("ref", "pallas"):
+            cfg = base.with_(kernels=kn)
+            fwd = jax.jit(lambda p, t, cfg=cfg:
+                          backbone_forward(p, cfg, tokens=t).logits)
+            t_us[kn] = _time(fwd, params, toks)
+            logits[kn] = fwd(params, toks)
+        rows.append({
+            "table": "kernel_dispatch",
+            "name": f"backbone_forward/{arch}",
+            "us_per_call": round(t_us["pallas"], 1),
+            "ref_us_per_call": round(t_us["ref"], 1),
+            "max_err": float(jnp.abs(logits["pallas"]
+                                     - logits["ref"]).max()),
+        })
+
+    # serve-step gate leg: Alg.-3 tick with the entropy gate routed
+    base = configs_mod.get(archs[0]).smoke()
+    tau = tau_frac * float(np.log(base.vocab_size))
+    params = init_backbone(jax.random.PRNGKey(seed), base)
+    toks = jax.random.randint(jax.random.PRNGKey(seed + 2), (batch, 4), 0,
+                              base.vocab_size)
+    t_us, got = {}, {}
+    for kn in ("ref", "pallas"):
+        cfg = base.with_(kernels=kn)
+        sc, _, _ = serve_step_config(cfg, tau=tau, boundary=0)
+        step = jax.jit(make_serve_step(sc, boundary=0))
+        t_us[kn] = _time(step, params, toks, None, None)
+        got[kn] = step(params, toks, None, None)
+    H = np.asarray(got["ref"]["entropy"])
+    sure = np.abs(H - tau) > 1e-3        # off-threshold gate decisions
+    rows.append({
+        "table": "kernel_dispatch",
+        "name": f"serve_step_gate/{archs[0]}",
+        "us_per_call": round(t_us["pallas"], 1),
+        "ref_us_per_call": round(t_us["ref"], 1),
+        "max_err": float(np.abs(np.asarray(got["pallas"]["entropy"])
+                                - H).max()),
+        "gate_mismatches": int((np.asarray(got["pallas"]["exited"])[sure]
+                                != np.asarray(got["ref"]["exited"])[sure])
+                               .sum()),
+    })
+    return rows
+
+
+def run_manifest(out: str = "BENCH_kernels.json", batch: int = 2,
+                 seq_len: int = 16, seed: int = 0) -> Dict:
+    """Full manifest: micro rows + model-layer dispatch rows + the parity
+    summary the CI gate reads."""
+    micro = run()
+    model_level = run_model_level(batch=batch, seq_len=seq_len, seed=seed)
+    parity = {
+        "max_micro_err": max(r["max_err"] for r in micro),
+        "max_model_err": max(r["max_err"] for r in model_level),
+        "gate_mismatches": sum(r.get("gate_mismatches", 0)
+                               for r in model_level),
+    }
+    result = {
+        "benchmark": "kernel_dispatch",
+        "config": {"archs": list(MODEL_ARCHS), "batch": batch,
+                   "seq_len": seq_len, "seed": seed,
+                   "platform": jax.default_backend(),
+                   "pallas_mode": ("native"
+                                   if jax.default_backend() == "tpu"
+                                   else "interpret")},
+        "micro": micro,
+        "model_level": model_level,
+        "parity": parity,
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    ap.add_argument("--max-delta", type=float, default=0.0,
+                    help="exit non-zero when any model-layer pallas-vs-ref "
+                         "delta exceeds this bound or any off-threshold "
+                         "gate decision flips (the CI kernels-smoke gate; "
+                         "0 disables)")
+    args = ap.parse_args()
+    r = run_manifest(out=args.out, batch=args.batch, seq_len=args.seq_len,
+                     seed=args.seed)
+
+    for row in r["micro"] + r["model_level"]:
+        extra = (f"  ref {row['ref_us_per_call']:.0f}us"
+                 if "ref_us_per_call" in row else "")
+        print(f"{row['name']:<30} {row['us_per_call']:>10.1f}us{extra}  "
+              f"max_err {row['max_err']:.2e}")
+    pa = r["parity"]
+    print(f"parity: micro {pa['max_micro_err']:.2e}, model "
+          f"{pa['max_model_err']:.2e}, gate mismatches "
+          f"{pa['gate_mismatches']}  -> {args.out}")
+
+    if args.max_delta > 0:
+        if pa["max_model_err"] > args.max_delta or pa["gate_mismatches"]:
+            print(f"FAIL: kernels=pallas diverged from kernels=ref "
+                  f"(--max-delta {args.max_delta:g})")
+            sys.exit(1)
+        print(f"parity gate ok (<= {args.max_delta:g})")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,12 @@ see that module).  MODEL_FLOPS = 6·N·D (train) / 2·N·D (prefill/decode),
 N = active params (MoE counts shared + top_k/E of routed experts), D =
 processed tokens; the ratio MODEL_FLOPS / (HLO_FLOPs x chips) exposes
 replicated or remat-wasted compute.
+
+The kernel-dispatch columns split out the FLOPs of the routed hot sites
+(``repro.kernels.dispatch``: the GQA contraction and the RWKV6 wkv
+recurrence) and name the backend a TPU run of this config would resolve —
+``pallas`` rows run those FLOPs in the fused kernels, ``ref`` rows leave
+them to XLA's own fusion.
 """
 from __future__ import annotations
 
@@ -67,6 +73,28 @@ def model_flops(arch: str, shape_name: str) -> float:
     return 2.0 * pc["active"] * shape.global_batch
 
 
+def routed_site_flops(arch: str, shape_name: str) -> Dict[str, object]:
+    """FLOPs of the dispatch-routed sites for one program, plus the backend
+    a TPU run of this config resolves (``auto`` -> ``pallas`` there)."""
+    from repro.kernels import dispatch
+    from repro.launch.dryrun import arch_config
+
+    shape = SHAPES_BY_NAME[shape_name]
+    cfg = arch_config(arch, shape_name)
+    if cfg is None:
+        return {"attention": 0.0, "wkv": 0.0, "kernels": "ref"}
+    kind = "decode" if shape.kind == "decode" else "train"
+    attn = dispatch.attention_site_flops(cfg, shape.global_batch,
+                                         shape.seq_len, kind=kind)
+    wkv = dispatch.wkv_site_flops(cfg, shape.global_batch, shape.seq_len,
+                                  kind=kind)
+    if shape.kind == "train":
+        attn, wkv = 3.0 * attn, 3.0 * wkv       # fwd + bwd ~ 3x fwd
+    return {"attention": attn, "wkv": wkv,
+            "kernels": dispatch.resolve_kernels(cfg.kernels,
+                                                platform="tpu")}
+
+
 # ---------------------------------------------------------------------------
 # terms
 # ---------------------------------------------------------------------------
@@ -87,11 +115,17 @@ def terms(rec: dict) -> Optional[dict]:
                ("collective", coll_s)), key=lambda kv: kv[1])[0]
     mf = model_flops(rec["arch"], rec["shape"])
     ratio = mf / (f * chips) if f else 0.0
+    routed = routed_site_flops(rec["arch"], rec["shape"])
+    routed_total = routed["attention"] + routed["wkv"]
     return {
         "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
         "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
         "dominant": dom, "model_flops": mf,
         "useful_ratio": ratio,
+        "kernels": routed["kernels"],
+        "routed_attn_flops": routed["attention"],
+        "routed_wkv_flops": routed["wkv"],
+        "routed_frac": routed_total / mf if mf else 0.0,
         "peak_mem_gb": rec.get("memory", {}).get("peak_memory_bytes", 0) / 2**30,
         "grad_mode": rec.get("grad_mode", ""),
     }
@@ -148,18 +182,19 @@ def markdown(path: str, mesh: str = "single_pod") -> str:
     rows = table(path, mesh)
     lines = [
         f"| arch | shape | compute s | memory s | collective s | dominant | "
-        f"useful flops ratio | peak mem/dev GB |",
-        "|---|---|---|---|---|---|---|---|",
+        f"useful flops ratio | kernels | routed flops % | peak mem/dev GB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
     ]
     for t in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
         if t["dominant"] == "skipped":
             lines.append(f"| {t['arch']} | {t['shape']} | — | — | — | "
-                         f"skipped | — | — |")
+                         f"skipped | — | — | — | — |")
             continue
         lines.append(
             f"| {t['arch']} | {t['shape']} | {t['compute_s']:.3g} | "
             f"{t['memory_s']:.3g} | {t['collective_s']:.3g} | "
             f"**{t['dominant']}** | {t['useful_ratio']:.3f} | "
+            f"{t['kernels']} | {t['routed_frac'] * 100:.1f} | "
             f"{t['peak_mem_gb']:.2f} |")
     return "\n".join(lines)
 

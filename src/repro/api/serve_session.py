@@ -67,8 +67,8 @@ import numpy as np
 from repro.checkpoint import load_pytree
 from repro.config import (HeteroProfile, ModelConfig, SplitEEConfig,
                           TrainConfig)
-from repro.core.losses import softmax_entropy
 from repro.core.spmd import StepConfig, make_serve_step
+from repro.kernels import dispatch
 from repro.models import frontend as frontend_mod
 from repro.models import heads as heads_mod
 from repro.models.backbone import (backbone_forward, build_plan, init_cache,
@@ -224,10 +224,16 @@ class ServeSession:
 
     def __init__(self, cfg: ModelConfig, params: dict, *, tau: float,
                  boundary: int = 0, slots: int = 8, max_len: int = 128,
-                 exit_policy: str = "select", mesh=None, recipe=None):
+                 exit_policy: str = "select", mesh=None, recipe=None,
+                 kernels: Optional[str] = None):
         if exit_policy not in ("select", "sticky"):
             raise ValueError(f"unknown exit_policy {exit_policy!r}; "
                              f"expected 'select' or 'sticky'")
+        if kernels is not None:
+            # kernels is layout/backend, not math: overriding it at serve
+            # time is always sound (equivalence-gated in tier-1)
+            dispatch.resolve_kernels(kernels)     # validate loudly
+            cfg = cfg.with_(kernels=kernels)
         self.cfg = cfg
         self.tau = float(tau)
         self.boundary = boundary
@@ -285,7 +291,8 @@ class ServeSession:
     def restore(cls, path: str, model, *, tau: Optional[float] = None,
                 boundary: Optional[int] = None, slots: int = 8,
                 max_len: int = 128, exit_policy: str = "select",
-                mesh=None, recipe=None) -> "ServeSession":
+                mesh=None, recipe=None,
+                kernels: Optional[str] = None) -> "ServeSession":
         """Build a serving session straight from a ``TrainSession``
         checkpoint (the ``path + '.npz'/'.json'`` pair ``TrainSession.save``
         writes).  ``model`` must be the adapter the run trained —
@@ -331,7 +338,8 @@ class ServeSession:
         return cls(model.cfg, params,
                    tau=(sp["entropy_threshold"] if tau is None else tau),
                    boundary=boundary, slots=slots, max_len=max_len,
-                   exit_policy=exit_policy, mesh=mesh, recipe=recipe)
+                   exit_policy=exit_policy, mesh=mesh, recipe=recipe,
+                   kernels=kernels)
 
     # ------------------------------------------------------------ admission
     def submit(self, prompt: Sequence[int], decode_tokens: int = 16) -> int:
@@ -512,11 +520,11 @@ def _one_slot_client_only(cfg: ModelConfig, boundary: int, axes, params,
                                        cache1[si][ri], cache_len, enc, False)
             new_cache[si][ri] = run_c
     e_logits = heads_mod.exit_head(params["exit_heads"][boundary], x, cfg)
-    H = softmax_entropy(e_logits)
+    H, gate = dispatch.backend_for(cfg).entropy_gate(e_logits, tau)
     # every occupied slot here has adopted; report the token as exited
     # (it comes from the exit head) regardless of the instantaneous H
     return {"tokens": jnp.argmax(e_logits[0, 0], -1).astype(jnp.int32),
-            "exited": sticky | (H[0, 0] < tau),
+            "exited": sticky | gate[0, 0],
             "entropy": H[0, 0],
             "cache": _strip_slot(axes, new_cache)}
 

@@ -205,6 +205,11 @@ class TrainSession:
             # resume is equivalence-tested)
             "recipe": {"name": self.ctx.recipe_name,
                        **recipe_to_meta(self.ctx.recipe)},
+            # kernel backend is likewise layout, not math: recorded for
+            # auditability only; restore runs whatever the restoring
+            # model's config selects
+            "kernels": getattr(getattr(self.ctx.model, "cfg", None),
+                               "kernels", None),
             "batch_size": self.ctx.batch_size,
             "seed": self.ctx.seed,
             # the augment callable itself is not serializable, but whether

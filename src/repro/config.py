@@ -92,6 +92,10 @@ class ModelConfig:
     cross_source_len: int = 1500       # design-limit source length (whisper)
     dtype: Any = jnp.bfloat16
     param_dtype: Any = jnp.bfloat16
+    # kernel backend for the routed hot sites (attention, wkv, entropy
+    # gate): "auto" = pallas on TPU / ref elsewhere; see
+    # repro.kernels.dispatch
+    kernels: str = "auto"
     # --- Hetero-SplitEE ---
     exit_layers: Tuple[int, ...] = ()  # layers after which an exit head sits
     # citation for the assigned-architecture pool
@@ -108,6 +112,8 @@ class ModelConfig:
         assert len(self.ffn_pattern) == self.num_layers, self.name
         for l in self.exit_layers:
             assert 0 < l < self.num_layers, f"exit layer {l} out of range"
+        assert self.kernels in ("auto", "pallas", "ref"), \
+            f"{self.name}: kernels={self.kernels!r}"
 
     # -- derived ----------------------------------------------------------
     @property

@@ -42,6 +42,7 @@ from repro.config import (HeteroProfile, ModelConfig, OptimizerConfig,
                           SplitEEConfig, TrainConfig)
 from repro.core.aggregation import participation_counts
 from repro.core.losses import accuracy, softmax_cross_entropy, softmax_entropy
+from repro.kernels import dispatch
 from repro.models.backbone import BackboneOutput, backbone_forward, build_plan
 from repro.optim import adam_update, make_schedule
 
@@ -407,6 +408,7 @@ def make_serve_step(sc: StepConfig, boundary: int = 0) -> Callable:
     compilation."""
     cfg = sc.model
     tau_default = sc.splitee.entropy_threshold
+    backend = dispatch.backend_for(cfg)
 
     def serve_step(params, tokens, cache, cache_len, embeds=None, enc=None,
                    tau=None):
@@ -415,8 +417,9 @@ def make_serve_step(sc: StepConfig, boundary: int = 0) -> Callable:
                                enc=enc, cache=cache, cache_len=cache_len)
         if out.exit_logits:
             e_logits = out.exit_logits[boundary]
-            H = softmax_entropy(e_logits)                     # (B, T)
-            exit_now = H < tau_
+            # Alg. 3 gate on the cfg.kernels backend (pallas = the fused
+            # streaming-entropy kernel; tau stays a traced scalar)
+            H, exit_now = backend.entropy_gate(e_logits, tau_)  # (B, T)
             final = jnp.where(exit_now[..., None], e_logits, out.logits)
         else:
             H = softmax_entropy(out.logits)

@@ -1,3 +1,29 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the three hot sites plus the backend dispatch that
+routes the model layer onto them.
+
+Layout:
+
+  * ``flash_attention.py`` / ``rwkv_wkv.py`` / ``entropy_exit.py`` — the raw
+    Pallas kernels (TPU target; interpret mode off-TPU).
+  * ``ops.py``    — jit'd public wrappers: shape padding, dtype handling,
+    traced runtime scalars (``tau``, ``kv_valid``), interpret default.
+  * ``ref.py``    — pure-jnp oracles, the ground truth every kernel is
+    equivalence-gated against in tier-1.
+  * ``dispatch.py`` — the :class:`~repro.kernels.dispatch.KernelBackend`
+    registry behind the ``ModelConfig.kernels`` knob
+    (``{"auto", "pallas", "ref"}``; auto = pallas on TPU, ref elsewhere).
+
+Backend contract: backends take model-layer layouts, return the reference
+path's dtypes, and must match the reference within the per-site tolerances
+in docs/ENGINES.md.  Training sites differentiate — the pallas backend runs
+the kernel forward and the reference VJP backward (``jax.custom_vjp``
+recompute), since Pallas kernels carry no autodiff rule.
+"""
+from repro.kernels import dispatch  # noqa: F401
+from repro.kernels.dispatch import (KernelBackend,  # noqa: F401
+                                    PallasBackend, ReferenceBackend,
+                                    available_backends, backend_for,
+                                    get_backend, register_backend,
+                                    resolve_kernels)
+from repro.kernels.ops import (entropy_exit, flash_attention,  # noqa: F401
+                               rwkv_wkv)

@@ -1,0 +1,260 @@
+"""Kernel-backend dispatch: routes the model-layer hot sites — GQA/cross
+attention, the RWKV6 wkv recurrence, and the Alg.-3 entropy gate — to either
+the Pallas kernels (``repro.kernels.ops``) or the pure-XLA reference code
+they were validated against.
+
+The knob is ``ModelConfig.kernels`` in ``{"auto", "pallas", "ref"}``:
+
+  * ``"ref"``    — the pure-jnp code paths the repo always ran (``_sdpa`` +
+    ``causal_mask``, ``ssm._wkv_chunked``, ``losses.softmax_entropy``).
+    Character-identical to the pre-dispatch behaviour.
+  * ``"pallas"`` — the fused kernels.  On TPU they compile natively; on any
+    other backend they run in Pallas **interpret mode**, which executes the
+    same kernel program through XLA ops — slow, but numerically faithful,
+    which is what makes off-TPU CI a real parity oracle (docs/DESIGN.md).
+  * ``"auto"``   — ``"pallas"`` iff ``jax.default_backend() == "tpu"``,
+    else ``"ref"``.  Default: CPU test runs stay bit-identical to the
+    reference while TPU runs get the fused kernels.
+
+Backend contract (:class:`KernelBackend`): all three methods take *model*
+layouts (the shapes the call sites already hold), return the same dtypes the
+reference path returned, and must agree with the reference within the
+per-site tolerances documented in docs/ENGINES.md.  Training sites need
+gradients; Pallas kernels have no autodiff rule, so the pallas backend wraps
+them in ``jax.custom_vjp``: Pallas forward, backward = the VJP of the
+matching ``repro.kernels.ref`` oracle (a recompute — the fwd/bwd pair stays
+within the fwd parity tolerance of the all-reference gradient).  Decode-path
+calls (traced ``kv_valid``) never differentiate and skip the wrapper.
+
+Third-party backends can be added with :func:`register_backend`.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+KERNEL_CHOICES = ("auto", "pallas", "ref")
+
+
+def resolve_kernels(name: str = "auto", platform: Optional[str] = None) -> str:
+    """Resolve the config knob to a registered backend name.  ``"auto"`` is
+    ``"pallas"`` on TPU (native compile) and ``"ref"`` everywhere else;
+    ``platform`` overrides the detected ``jax.default_backend()`` (the
+    roofline report resolves for ``"tpu"`` regardless of the host)."""
+    if name != "auto" and name not in _BACKENDS:
+        raise ValueError(f"unknown kernels backend {name!r}; expected one of "
+                         f"{('auto',) + available_backends()}")
+    if name != "auto":
+        return name
+    platform = jax.default_backend() if platform is None else platform
+    return "pallas" if platform == "tpu" else "ref"
+
+
+# ---------------------------------------------------------------------------
+# the backend interface
+# ---------------------------------------------------------------------------
+
+
+class KernelBackend:
+    """One implementation of the three routed hot sites (model layouts)."""
+
+    name = "base"
+
+    def attention(self, q, k, v, *, causal: bool = False,
+                  window: Optional[int] = None, kv_valid=None):
+        """q (B,T,H,hd), k/v (B,S,Hkv,hd), H % Hkv == 0 -> (B,T,H,hd).
+        ``causal``/``window`` are the static train/prefill masks;
+        ``kv_valid`` is the traced decode ring-buffer valid prefix
+        (keys at ``kpos >= kv_valid`` are masked)."""
+        raise NotImplementedError
+
+    def wkv(self, r, k, v, log_w, u, *, chunk: int):
+        """RWKV6 wkv.  r/k/v/log_w (B,T,H,K), u (H,K) ->
+        ``(y (B,T,H,K) fp32, S_T (B,H,K,K) fp32)``."""
+        raise NotImplementedError
+
+    def entropy_gate(self, logits, tau):
+        """logits (..., V), traced scalar ``tau`` ->
+        ``(H (...) fp32, exit (...) bool)`` with exit iff ``H < tau``."""
+        raise NotImplementedError
+
+
+class ReferenceBackend(KernelBackend):
+    """The pure-XLA paths the call sites always ran — character-identical
+    math, so ``kernels="ref"`` reproduces pre-dispatch behaviour bitwise."""
+
+    name = "ref"
+
+    def attention(self, q, k, v, *, causal: bool = False,
+                  window: Optional[int] = None, kv_valid=None):
+        from repro.models.attention import _sdpa, causal_mask
+        T, S = q.shape[1], k.shape[1]
+        scale = 1.0 / math.sqrt(q.shape[-1])
+        mask = None
+        if causal:
+            mask = causal_mask(T, S, window)
+        if kv_valid is not None:
+            valid = (jnp.arange(S) < kv_valid)[None, :]
+            mask = valid if mask is None else mask & valid
+        return _sdpa(q, k, v, mask, scale)
+
+    def wkv(self, r, k, v, log_w, u, *, chunk: int):
+        from repro.models.ssm import _wkv_chunked
+        return _wkv_chunked(r, k, v, log_w, u, chunk)
+
+    def entropy_gate(self, logits, tau):
+        from repro.core.losses import softmax_entropy
+        H = softmax_entropy(logits)
+        return H, H < tau
+
+
+class PallasBackend(KernelBackend):
+    """The fused kernels (``repro.kernels.ops``): native on TPU, interpret
+    mode elsewhere.  Training sites differentiate through ``custom_vjp``
+    wrappers whose backward recomputes via the ``kernels/ref`` oracles."""
+
+    name = "pallas"
+
+    def attention(self, q, k, v, *, causal: bool = False,
+                  window: Optional[int] = None, kv_valid=None):
+        qt, kt, vt = (jnp.swapaxes(a, 1, 2) for a in (q, k, v))
+        if kv_valid is None:
+            out = _diff_flash_attention(causal, window)(qt, kt, vt)
+        else:                           # decode: no grad, traced prefix
+            out = ops.flash_attention(qt, kt, vt, causal=causal,
+                                      window=window, kv_valid=kv_valid)
+        return jnp.swapaxes(out, 1, 2)
+
+    def wkv(self, r, k, v, log_w, u, *, chunk: int):
+        return _diff_wkv(chunk)(r, k, v, log_w, u)
+
+    def entropy_gate(self, logits, tau):
+        V = logits.shape[-1]
+        lead = logits.shape[:-1]
+        H, ex = ops.entropy_exit(logits.reshape(-1, V), tau)
+        return H.reshape(lead), ex.reshape(lead)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrappers for the training sites (Pallas has no autodiff rule)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _diff_flash_attention(causal: bool, window: Optional[int]):
+    """Pallas flash forward in kernel layout (B,H,T,D); backward = VJP of
+    the jnp oracle (a flash-style recompute: nothing but q/k/v is saved)."""
+
+    def ref_fwd(q, k, v):
+        return kref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+    @jax.custom_vjp
+    def fa(q, k, v):
+        return ops.flash_attention(q, k, v, causal=causal, window=window)
+
+    def fwd(q, k, v):
+        return fa(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(ref_fwd, *res)
+        return vjp(g)
+
+    fa.defvjp(fwd, bwd)
+    return fa
+
+
+@functools.lru_cache(maxsize=None)
+def _diff_wkv(chunk: int):
+    """Pallas chunked wkv forward (model layout, with the carried state);
+    backward = VJP of the token-scan oracle."""
+
+    def ref_fwd(r, k, v, log_w, u):
+        return kref.rwkv_wkv_ref_model(r, k, v, log_w, u)
+
+    @jax.custom_vjp
+    def wkv(r, k, v, log_w, u):
+        return ops.rwkv_wkv(r, k, v, log_w, u, chunk=chunk,
+                            return_state=True)
+
+    def fwd(r, k, v, log_w, u):
+        return wkv(r, k, v, log_w, u), (r, k, v, log_w, u)
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(ref_fwd, *res)
+        return vjp(g)
+
+    wkv.defvjp(fwd, bwd)
+    return wkv
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+_BACKENDS = {}
+
+
+def register_backend(backend: KernelBackend) -> KernelBackend:
+    """Register a backend instance under ``backend.name``; later
+    registrations under the same name win (tests swap in probes)."""
+    _BACKENDS[backend.name] = backend
+    return backend
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+def get_backend(name: str = "auto") -> KernelBackend:
+    return _BACKENDS[resolve_kernels(name)]
+
+
+def backend_for(cfg) -> KernelBackend:
+    """The backend a ``ModelConfig`` selects (``cfg.kernels``, default
+    ``"auto"`` for configs predating the knob)."""
+    return get_backend(getattr(cfg, "kernels", "auto"))
+
+
+register_backend(ReferenceBackend())
+register_backend(PallasBackend())
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOP counts of the routed sites (roofline reporting)
+# ---------------------------------------------------------------------------
+
+
+def attention_site_flops(cfg, batch: int, seq_len: int,
+                         kind: str = "train") -> float:
+    """FLOPs of the routed attention score+value matmuls for one forward:
+    ``2 * 2 * B * H * Tq * Tk_eff * hd`` per attention layer.  ``kind``
+    "decode" means Tq = 1 against a ``seq_len``-deep cache."""
+    H, hd = cfg.num_heads, cfg.head_dim
+    Tk = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    Tq = 1 if kind == "decode" else seq_len
+    per_layer = 4.0 * batch * H * Tq * Tk * hd
+    n_attn = sum(b in ("attn", "shared_attn") for b in cfg.block_pattern)
+    return per_layer * n_attn
+
+
+def wkv_site_flops(cfg, batch: int, seq_len: int,
+                   kind: str = "train") -> float:
+    """FLOPs of the routed chunked-wkv per forward: per token per head,
+    ~``4*Q*K`` intra-chunk (scores + values over the Q-token chunk) plus
+    ~``4*K*K`` inter-chunk/state work."""
+    if cfg.ssm is None or cfg.ssm.kind != "rwkv6":
+        return 0.0
+    s, K = cfg.ssm, cfg.ssm.head_dim
+    H = cfg.d_model // K
+    T = 1 if kind == "decode" else seq_len
+    Q = min(s.chunk_size, T)
+    n_wkv = sum(b == "rwkv6" for b in cfg.block_pattern)
+    return batch * T * H * K * (4.0 * Q + 4.0 * K) * n_wkv

@@ -22,8 +22,8 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _entropy_kernel(x_ref, h_ref, exit_ref, m_scr, s_scr, u_scr, *,
-                    tau: float, vocab: int, block_v: int):
+def _entropy_kernel(tau_ref, x_ref, h_ref, exit_ref, m_scr, s_scr, u_scr, *,
+                    vocab: int, block_v: int):
     iv = pl.program_id(1)
     nv = pl.num_programs(1)
 
@@ -51,24 +51,27 @@ def _entropy_kernel(x_ref, h_ref, exit_ref, m_scr, s_scr, u_scr, *,
         S = jnp.maximum(s_scr[...], 1e-30)
         H = m_scr[...] + jnp.log(S) - u_scr[...] / S
         h_ref[...] = H
-        exit_ref[...] = (H < tau).astype(jnp.int32)
+        exit_ref[...] = (H < tau_ref[0, 0]).astype(jnp.int32)
 
 
-def entropy_exit_pallas(logits: jnp.ndarray, tau: float, *,
+def entropy_exit_pallas(logits: jnp.ndarray, tau: jnp.ndarray, *,
                         block_rows: int = 8, block_v: int = 2048,
                         interpret: bool = False):
     """logits: (B, V) -> (entropy (B,) f32, exit (B,) int32 0/1).
-    B must be a multiple of block_rows (ops.py pads)."""
+    B must be a multiple of block_rows (ops.py pads).  ``tau`` is a traced
+    (1, 1) float32 scalar living in SMEM — threshold sweeps (the paper's
+    Fig. 2 axis) reuse one compilation."""
     B, V = logits.shape
     assert B % block_rows == 0
+    tau = jnp.asarray(tau, jnp.float32).reshape(1, 1)
     nv = (V + block_v - 1) // block_v
     grid = (B // block_rows, nv)
-    kernel = functools.partial(_entropy_kernel, tau=tau, vocab=V,
-                               block_v=block_v)
+    kernel = functools.partial(_entropy_kernel, vocab=V, block_v=block_v)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((block_rows, block_v), lambda r, iv: (r, iv))],
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec((block_rows, block_v), lambda r, iv: (r, iv))],
         out_specs=[
             pl.BlockSpec((block_rows,), lambda r, iv: (r,)),
             pl.BlockSpec((block_rows,), lambda r, iv: (r,)),
@@ -83,4 +86,4 @@ def entropy_exit_pallas(logits: jnp.ndarray, tau: float, *,
             pltpu.VMEM((block_rows,), jnp.float32),
         ],
         interpret=interpret,
-    )(logits)
+    )(tau, logits)

@@ -25,12 +25,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                  scale: float, block_q: int, block_k: int,
+def _flash_kernel(kv_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale: float, block_q: int, block_k: int,
                   causal: bool, window: Optional[int], seq_k: int):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
     nk = pl.num_programs(3)
+    kv_len = kv_ref[0, 0]                                    # traced valid-prefix
 
     @pl.when(ik == 0)
     def _init():
@@ -41,8 +42,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     q_start = iq * block_q
     k_start = ik * block_k
     # block-level skip: entirely above the causal diagonal, entirely left of
-    # the sliding window, or entirely inside the key padding.
-    run = jnp.asarray(k_start < seq_k)
+    # the sliding window, entirely inside the key padding, or entirely past
+    # the traced valid prefix (decode ring buffers attend kpos < kv_len).
+    run = jnp.logical_and(k_start < seq_k, k_start < kv_len)
     if causal:
         run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
     if window is not None:
@@ -60,7 +62,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         # padded keys are masked unconditionally — the causal diagonal only
         # covers them when Tq == Tk, and non-causal shapes (the ServeSession
         # decode path, Tq != Tk) have no diagonal at all
-        mask = kpos < seq_k
+        mask = jnp.logical_and(kpos < seq_k, kpos < kv_len)
         if causal:
             mask &= kpos <= qpos
         if window is not None:
@@ -89,16 +91,22 @@ def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                            window: Optional[int] = None,
                            block_q: int = 128, block_k: int = 128,
                            seq_k: Optional[int] = None,
+                           kv_len: Optional[jnp.ndarray] = None,
                            interpret: bool = False) -> jnp.ndarray:
     """q: (B, H, Tq, D); k/v: (B, Hkv, Tk, D), H % Hkv == 0.  Tq/Tk must be
     multiples of the block sizes (ops.py pads arbitrary shapes); ``seq_k``
     is the true (pre-padding) key length — keys at ``kpos >= seq_k`` are
-    masked inside the kernel regardless of the causal/window setting."""
+    masked inside the kernel regardless of the causal/window setting.
+    ``kv_len`` is an optional *traced* int32 scalar masking keys at
+    ``kpos >= kv_len`` on top of the static masks — the decode ring-buffer
+    valid prefix, varying per step without recompilation."""
     B, H, Tq, D = q.shape
     _, Hkv, Tk, _ = k.shape
     assert H % Hkv == 0 and Tq % block_q == 0 and Tk % block_k == 0
     seq_k = Tk if seq_k is None else seq_k
     assert 0 < seq_k <= Tk
+    kv_len = (jnp.full((1, 1), seq_k, jnp.int32) if kv_len is None
+              else jnp.asarray(kv_len, jnp.int32).reshape(1, 1))
     scale = 1.0 / math.sqrt(D)
     grid = (B, H, Tq // block_q, Tk // block_k)
 
@@ -111,6 +119,7 @@ def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
             pl.BlockSpec((1, 1, block_k, D), kv_index),
             pl.BlockSpec((1, 1, block_k, D), kv_index),
@@ -124,4 +133,4 @@ def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             pltpu.VMEM((block_q, D), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(kv_len, q, k, v)

@@ -31,9 +31,13 @@ def _pad_to(x, axis, mult):
                                              "block_k", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None,
+                    kv_valid=None,
                     block_q: int = 128, block_k: int = 128,
                     interpret: Optional[bool] = None) -> jnp.ndarray:
-    """q: (B, H, Tq, D); k/v: (B, Hkv, Tk, D).  Arbitrary Tq/Tk (padded)."""
+    """q: (B, H, Tq, D); k/v: (B, Hkv, Tk, D).  Arbitrary Tq/Tk (padded).
+    ``kv_valid`` is an optional traced int32 scalar: keys at
+    ``kpos >= kv_valid`` are masked (the decode ring-buffer valid prefix);
+    it varies per call without triggering recompilation."""
     interpret = _default_interpret() if interpret is None else interpret
     Tq, Tk = q.shape[2], k.shape[2]
     bq, bk = min(block_q, max(Tq, 8)), min(block_k, max(Tk, 8))
@@ -45,15 +49,17 @@ def flash_attention(q, k, v, *, causal: bool = True,
     # garbage but sliced off below
     out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
                                  block_q=bq, block_k=bk, seq_k=Tk,
-                                 interpret=interpret)
+                                 kv_len=kv_valid, interpret=interpret)
     return out[:, :, :Tq]
 
 
-@functools.partial(jax.jit, static_argnames=("tau", "block_rows", "block_v",
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_v",
                                              "interpret"))
-def entropy_exit(logits, tau: float, *, block_rows: int = 8,
+def entropy_exit(logits, tau, *, block_rows: int = 8,
                  block_v: int = 2048, interpret: Optional[bool] = None):
-    """logits (B, V) -> (entropy (B,), exit_mask (B,) bool)."""
+    """logits (B, V) -> (entropy (B,), exit_mask (B,) bool).  ``tau`` is a
+    traced runtime scalar (float or 0-d array): threshold sweeps reuse one
+    compilation, matching ``make_serve_step``'s traced-tau contract."""
     interpret = _default_interpret() if interpret is None else interpret
     B, V = logits.shape
     br = min(block_rows, B) if B % min(block_rows, B) == 0 else 1
@@ -64,11 +70,15 @@ def entropy_exit(logits, tau: float, *, block_rows: int = 8,
     return H[:B], ex[:B].astype(bool)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("chunk", "return_state",
+                                             "interpret"))
 def rwkv_wkv(r, k, v, log_w, u, *, chunk: int = 64,
+             return_state: bool = False,
              interpret: Optional[bool] = None):
     """r/k/v/log_w: (B, T, H, K); u: (H, K) -> y (B, T, H, K) fp32.
-    Arbitrary T (padded; log_w pads to 0 => identity steps)."""
+    Arbitrary T (padded; log_w pads to 0 => identity steps).  With
+    ``return_state`` also returns the final carried state (B, H, K, K) fp32
+    (unaffected by padding: pad steps have decay 1 and k = 0)."""
     interpret = _default_interpret() if interpret is None else interpret
     B, T, H, K = r.shape
     ch = min(chunk, T)
@@ -82,6 +92,10 @@ def rwkv_wkv(r, k, v, log_w, u, *, chunk: int = 64,
     vf, _ = _pad_to(vf, 1, ch)
     lwf, _ = _pad_to(lwf, 1, ch)
     uf = jnp.broadcast_to(u[None], (B, H, K)).reshape(B * H, K)
-    y = rwkv_wkv_pallas(rf, kf, vf, lwf, uf, chunk=ch, interpret=interpret)
+    y, sT = rwkv_wkv_pallas(rf, kf, vf, lwf, uf, chunk=ch,
+                            interpret=interpret)
     y = y[:, :T].reshape(B, H, T, K)
-    return jnp.moveaxis(y, 1, 2)
+    y = jnp.moveaxis(y, 1, 2)
+    if return_state:
+        return y, sT.reshape(B, H, K, K)
+    return y

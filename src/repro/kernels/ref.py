@@ -9,8 +9,11 @@ import jax.numpy as jnp
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True,
-                        window: Optional[int] = None) -> jnp.ndarray:
-    """q: (B,H,Tq,D), k/v: (B,Hkv,Tk,D) -> (B,H,Tq,D), fp32 softmax."""
+                        window: Optional[int] = None,
+                        kv_valid=None) -> jnp.ndarray:
+    """q: (B,H,Tq,D), k/v: (B,Hkv,Tk,D) -> (B,H,Tq,D), fp32 softmax.
+    ``kv_valid`` (traced int32 scalar) masks keys at ``kpos >= kv_valid`` —
+    the decode ring-buffer valid prefix."""
     B, H, Tq, D = q.shape
     Hkv, Tk = k.shape[1], k.shape[2]
     g = H // Hkv
@@ -24,6 +27,8 @@ def flash_attention_ref(q, k, v, *, causal: bool = True,
         mask &= kpos <= qpos
     if window is not None:
         mask &= kpos > qpos - window
+    if kv_valid is not None:
+        mask &= kpos < kv_valid
     s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgts,bhsd->bhgtd", p, v.astype(jnp.float32))
@@ -40,6 +45,12 @@ def entropy_exit_ref(logits, tau: float):
 def rwkv_wkv_ref(r, k, v, log_w, u):
     """Naive token-by-token recurrence.  r/k/v/log_w: (BH, T, K), u: (BH, K).
     Returns y (BH, T, K) fp32."""
+    y, _ = rwkv_wkv_ref_state(r, k, v, log_w, u)
+    return y
+
+
+def rwkv_wkv_ref_state(r, k, v, log_w, u):
+    """:func:`rwkv_wkv_ref` plus the final carried state (BH, K, K) fp32."""
     BH, T, K = r.shape
     rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
     wf = jnp.exp(log_w.astype(jnp.float32))
@@ -53,8 +64,24 @@ def rwkv_wkv_ref(r, k, v, log_w, u):
         return S, y
 
     S0 = jnp.zeros((BH, K, K), jnp.float32)
-    _, ys = jax.lax.scan(step, S0, (jnp.moveaxis(rf, 1, 0),
-                                    jnp.moveaxis(kf, 1, 0),
-                                    jnp.moveaxis(vf, 1, 0),
-                                    jnp.moveaxis(wf, 1, 0)))
-    return jnp.moveaxis(ys, 0, 1)
+    ST, ys = jax.lax.scan(step, S0, (jnp.moveaxis(rf, 1, 0),
+                                     jnp.moveaxis(kf, 1, 0),
+                                     jnp.moveaxis(vf, 1, 0),
+                                     jnp.moveaxis(wf, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), ST
+
+
+def rwkv_wkv_ref_model(r, k, v, log_w, u):
+    """Model-layout oracle: r/k/v/log_w (B, T, H, K), u (H, K) ->
+    ``(y (B, T, H, K) fp32, S_T (B, H, K, K) fp32)`` — the exact contract of
+    ``dispatch.KernelBackend.wkv``; the pallas backend recomputes through
+    this function in its backward pass."""
+    B, T, H, K = r.shape
+
+    def flat(x):
+        return jnp.moveaxis(x, 2, 1).reshape(B * H, T, K)
+
+    uf = jnp.broadcast_to(u[None], (B, H, K)).reshape(B * H, K)
+    y, ST = rwkv_wkv_ref_state(flat(r), flat(k), flat(v), flat(log_w), uf)
+    y = jnp.moveaxis(y.reshape(B, H, T, K), 1, 2)
+    return y, ST.reshape(B, H, K, K)

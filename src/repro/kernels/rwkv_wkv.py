@@ -23,9 +23,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, s_scr, *,
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, sT_ref, s_scr, *,
                 chunk: int):
     ic = pl.program_id(1)
+    nc = pl.num_programs(1)
 
     @pl.when(ic == 0)
     def _init():
@@ -64,12 +65,18 @@ def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, s_scr, *,
                                    preferred_element_type=jnp.float32))
     s_scr[...] = s_new
 
+    @pl.when(ic == nc - 1)
+    def _emit_state():
+        sT_ref[0, ...] = s_new                                # carry (K, K)
+
 
 def rwkv_wkv_pallas(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                     log_w: jnp.ndarray, u: jnp.ndarray, *,
                     chunk: int = 64, interpret: bool = False) -> jnp.ndarray:
     """r/k/v/log_w: (BH, T, K) flattened batch*heads; u: (BH, K).
-    T must be a multiple of ``chunk`` (ops.py pads).  Returns y (BH, T, K)."""
+    T must be a multiple of ``chunk`` (ops.py pads).  Returns
+    ``(y (BH, T, K), S_T (BH, K, K))`` — the outputs plus the final carried
+    state, so chunked prefill can seed the decode cache."""
     BH, T, K = r.shape
     assert T % chunk == 0
     grid = (BH, T // chunk)
@@ -80,8 +87,10 @@ def rwkv_wkv_pallas(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         grid=grid,
         in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
                   pl.BlockSpec((1, K), lambda b, c: (b, 0))],
-        out_specs=seq_spec,
-        out_shape=jax.ShapeDtypeStruct((BH, T, K), jnp.float32),
+        out_specs=[seq_spec,
+                   pl.BlockSpec((1, K, K), lambda b, c: (b, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((BH, T, K), jnp.float32),
+                   jax.ShapeDtypeStruct((BH, K, K), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((K, K), jnp.float32)],
         interpret=interpret,
     )(r, k, v, log_w, u)

@@ -44,10 +44,14 @@ def main() -> None:
     ap.add_argument("--ckpt", default=None,
                     help="TrainSession checkpoint stem to serve; default "
                          "serves seed-initialized weights")
+    ap.add_argument("--kernels", default="auto",
+                    choices=["auto", "pallas", "ref"],
+                    help="kernel backend for the routed hot sites: "
+                         "auto = pallas on TPU, ref elsewhere")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = configs_mod.get(args.arch).smoke()
+    cfg = configs_mod.get(args.arch).smoke().with_(kernels=args.kernels)
     exits, cut, skip_frac = resolve_serve_boundary(cfg, args.boundary)
     max_len = args.prompt_len + 1 + args.decode_tokens
 

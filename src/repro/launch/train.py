@@ -120,7 +120,8 @@ def resolve_arch_config(args):
         mod = configs_mod.get(args.arch)
     except ValueError as e:
         raise SystemExit(f"--arch: {e}") from None
-    return mod.smoke() if args.smoke else mod.config()
+    cfg = mod.smoke() if args.smoke else mod.config()
+    return cfg.with_(kernels=getattr(args, "kernels", "auto"))
 
 
 def build_model_and_data(args, arch_cfg):
@@ -188,6 +189,12 @@ def main() -> None:
     ap.add_argument("--engine", default="auto",
                     choices=["auto", "spmd", "fused", "reference"])
     ap.add_argument("--grad-mode", default="eq1", choices=["eq1", "sum"])
+    ap.add_argument("--kernels", default="auto",
+                    choices=["auto", "pallas", "ref"],
+                    help="kernel backend for the routed hot sites "
+                         "(attention, wkv, entropy gate) with --arch: "
+                         "auto = pallas on TPU, ref elsewhere.  Layout-"
+                         "only — equivalence-gated, so not a resume knob")
     ap.add_argument("--mesh", default="auto",
                     choices=["auto", "single", "multi"],
                     help="auto: engine default over visible devices; "

@@ -1,7 +1,9 @@
 """Attention mixers: GQA (with RoPE + optional sliding window), DeepSeek MLA,
-and encoder-decoder cross attention.  Pure-jnp reference path used for
-lowering/dry-run; the Pallas flash kernel in ``repro.kernels`` is the TPU
-hot-path and is validated against this module.
+and encoder-decoder cross attention.  The score/value contraction of GQA and
+cross attention routes through ``repro.kernels.dispatch`` — the
+``cfg.kernels`` knob picks the Pallas flash kernel or the pure-jnp ``_sdpa``
+below, which doubles as the equivalence oracle.  MLA stays on the inline
+reference path (its weight-absorbed latent decode has no kernel yet).
 
 Cache contract (decode):
   GQA  : {"k": (B, W, Hkv, hd), "v": (B, W, Hkv, hd)}  — W = window or max_len.
@@ -19,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import MLAConfig, ModelConfig
+from repro.kernels import dispatch
 from repro.models.common import fan_in_init, init_rmsnorm, rmsnorm, zeros
 from repro.models.rope import apply_rope
 
@@ -92,8 +95,9 @@ def gqa_forward(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
                 cache_len: Optional[jnp.ndarray] = None,
                 ) -> Tuple[jnp.ndarray, Optional[dict]]:
     """Full causal (train/prefill) when ``cache is None``; single-token decode
-    against a (ring-buffer) cache otherwise."""
-    scale = 1.0 / math.sqrt(cfg.head_dim)
+    against a (ring-buffer) cache otherwise.  The attention contraction runs
+    on the ``cfg.kernels`` backend."""
+    backend = dispatch.backend_for(cfg)
     q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
     k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
     v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
@@ -103,9 +107,8 @@ def gqa_forward(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
     k = apply_rope(k, positions, cfg.rope_theta)
 
     if cache is None:
-        T = x.shape[1]
-        mask = causal_mask(T, T, cfg.sliding_window)
-        out = _sdpa(q, k, v, mask, scale)
+        out = backend.attention(q, k, v, causal=True,
+                                window=cfg.sliding_window)
     else:
         # write (k, v) into the (ring) buffer, attend over it.  Modes:
         # prefill (T > 1, cache_len == 0) and decode (T == 1, ring).  Token
@@ -115,8 +118,8 @@ def gqa_forward(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
         if T > 1 and T >= W:
             # prefill longer than the window: full in-flight SWA attention,
             # then keep only the last W tokens, rolled to slot p % W.
-            mask = causal_mask(T, T, cfg.sliding_window)
-            out = _sdpa(q, k, v, mask, scale)
+            out = backend.attention(q, k, v, causal=True,
+                                    window=cfg.sliding_window)
             shift = (T - W) % W
             ck = jnp.roll(k[:, T - W:], shift, axis=1)
             cv = jnp.roll(v[:, T - W:], shift, axis=1)
@@ -127,12 +130,14 @@ def gqa_forward(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
             cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
             cache = {"k": ck, "v": cv}
             if T > 1:
-                # short prefill: causal over the freshly written [0, T) slots.
-                mask = causal_mask(T, W, cfg.sliding_window)
+                # short prefill: causal over the freshly written [0, T)
+                # slots (ragged Tq < Tk — the diagonal masks slots >= T)
+                out = backend.attention(q, ck, cv, causal=True,
+                                        window=cfg.sliding_window)
             else:
+                # decode: traced valid ring prefix, never recompiles
                 n_valid = jnp.minimum(cache_len + 1, W)
-                mask = (jnp.arange(W) < n_valid)[None, :]    # (1, W)
-            out = _sdpa(q, ck, cv, mask, scale)
+                out = backend.attention(q, ck, cv, kv_valid=n_valid)
     out = jnp.einsum("bthk,hkd->btd", out, params["wo"])
     return out.astype(x.dtype), cache
 
@@ -254,9 +259,8 @@ def init_cross_attn(rng, cfg: ModelConfig) -> dict:
 def cross_attn_forward(params: dict, x: jnp.ndarray, enc: jnp.ndarray,
                        cfg: ModelConfig) -> jnp.ndarray:
     """x: (B,T,d) decoder stream; enc: (B,S,d) encoder states (stub frontend)."""
-    scale = 1.0 / math.sqrt(cfg.head_dim)
     q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
     k = jnp.einsum("bsd,dhk->bshk", enc, params["wk"])
     v = jnp.einsum("bsd,dhk->bshk", enc, params["wv"])
-    out = _sdpa(q, k, v, None, scale)
+    out = dispatch.backend_for(cfg).attention(q, k, v)
     return jnp.einsum("bthk,hkd->btd", out, params["wo"]).astype(x.dtype)

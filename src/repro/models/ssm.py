@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig, SSMConfig
+from repro.kernels import dispatch
 from repro.models.common import fan_in_init, init_rmsnorm, rmsnorm, ones, zeros
 
 # ---------------------------------------------------------------------------
@@ -310,7 +311,11 @@ def rwkv6_forward(params: dict, x: jnp.ndarray, cfg: ModelConfig, *,
     log_w = -jnp.exp(w_dd).reshape(*x.shape[:2], H, K)      # (B,T,H,K) < 0
 
     if cache is None or x.shape[1] > 1:
-        y, ST = _wkv_chunked(r, k, v, log_w, params["u"], s.chunk_size)
+        # train / chunked prefill: the wkv recurrence runs on the
+        # cfg.kernels backend (ref = _wkv_chunked below, pallas = the
+        # chunked Pallas kernel with reference-VJP backward)
+        y, ST = dispatch.backend_for(cfg).wkv(r, k, v, log_w, params["u"],
+                                              chunk=s.chunk_size)
         new_cache = (None if cache is None else
                      {"tm_last": x[:, -1:], "cm_last": cache["cm_last"],
                       "state": ST})
