@@ -13,7 +13,11 @@ batch sharded over the mesh's ``data`` axis.  Emits:
   * ``BENCH_spmd.json``  — the three-way comparison.  The spmd leg records
     the session's ``engine_name`` selection note, and degrades to
     ``{"skipped": <reason>}`` when no multi-device mesh is available, so
-    the manifest always records the real execution path;
+    the manifest always records the real execution path.  Also carries the
+    ``overlap`` leg: the staging pipeline (``data/staging.py``) on vs off
+    over the engine's real pipelined chunk plan, with the measured
+    stage-vs-compute ``overlap_fraction`` and the (required-zero) on/off
+    trajectory delta — both behind the ``--max-delta`` gate;
   * ``BENCH_spmd_fsdp.json`` — the recipe-sharded leg: the ``--recipe``
     sharding recipe (tiny-leaf floor lowered so the MLP actually shards)
     on a ``(2, n/2, 1)`` lanes/data/model mesh — cohort lanes, params and
@@ -49,7 +53,7 @@ from repro.launch.shardings import NAMED_RECIPES, resolve_recipe
 SCHEMA_KEYS = ("benchmark", "config", "reference", "fused", "speedup",
                "max_metric_delta")
 SPMD_SCHEMA_KEYS = ("benchmark", "config", "reference", "fused", "spmd",
-                    "speedup", "max_metric_delta")
+                    "speedup", "max_metric_delta", "overlap")
 FSDP_SCHEMA_KEYS = ("benchmark", "config", "reference", "fused",
                     "spmd_fsdp", "speedup", "max_metric_delta")
 
@@ -107,13 +111,15 @@ def run(rounds: int = 60, clients: int = 4, batch_size: int = 64,
     ref_tr, ref_wall = time_engine(make("reference"))
     fus_tr, fus_wall = time_engine(make("fused"), chunk_rounds=rounds)
     # only construction may skip the leg (supports() rejections: no mesh /
-    # one device); a ValueError raised while *training* must propagate
+    # one device); a ValueError raised while *training* must propagate.
+    # chunk_rounds stays 0 (auto): the run executes as the engine's real
+    # pipelined chunk plan, staging overlapped with compute
     try:
         spmd_sess = make("spmd")
     except ValueError as e:
         spmd_tr, spmd_wall, spmd_skip = None, None, str(e)
     else:
-        spmd_tr, spmd_wall = time_engine(spmd_sess, chunk_rounds=rounds)
+        spmd_tr, spmd_wall = time_engine(spmd_sess)
         spmd_skip = None
 
     # engines consumed identical data: timed-window metrics must agree
@@ -157,6 +163,37 @@ def run(rounds: int = 60, clients: int = 4, batch_size: int = 64,
 
     spmd_result = leg_manifest("spmd_vs_fused_vs_reference", "spmd",
                                spmd_tr, spmd_wall, spmd_skip, {})
+    if spmd_tr is not None:
+        spmd_result["spmd"]["stage_stats"] = dict(
+            spmd_tr.engine.last_stage_stats)
+
+    # ---- overlap on/off: the staging pipeline's contribution -----------
+    # same engine, same pipelined chunk plan, double buffer on vs off;
+    # trajectories must be bit-identical (the pipeline only reorders host
+    # work), and the on leg must actually hide staging behind compute
+    ov_engine = "spmd" if spmd_tr is not None else "fused"
+
+    def time_overlap(on: bool):
+        sess = make(ov_engine)
+        sess.engine.overlap_staging = on
+        sess, wall = time_engine(sess)
+        return sess, wall, dict(sess.engine.last_stage_stats)
+
+    on_tr, on_wall, on_stats = time_overlap(True)
+    off_tr, off_wall, off_stats = time_overlap(False)
+    spmd_result["overlap"] = {
+        "engine": ov_engine,
+        "on": {"wall_s": on_wall, "rounds_per_sec": rounds / on_wall,
+               **on_stats},
+        "off": {"wall_s": off_wall, "rounds_per_sec": rounds / off_wall,
+                **off_stats},
+        "speedup": off_wall / on_wall,
+        "on_off_metric_delta": _metric_delta(on_tr, off_tr),
+        "max_metric_delta_vs_reference": max(
+            _metric_delta(ref_tr, on_tr), _metric_delta(ref_tr, off_tr)),
+    }
+    spmd_result["max_metric_delta"]["overlap"] = (
+        spmd_result["overlap"]["max_metric_delta_vs_reference"])
     if spmd_out:
         with open(spmd_out, "w") as f:
             json.dump(spmd_result, f, indent=1)
@@ -196,6 +233,7 @@ def run(rounds: int = 60, clients: int = 4, batch_size: int = 64,
              "us_per_call": result[eng]["wall_s"] / rounds * 1e6,
              "derived": f"{result[eng]['rounds_per_sec']:.1f} rounds/s",
              **result} for eng in ("reference", "fused")]
+    rows[0]["overlap"] = spmd_result["overlap"]
     if spmd_tr is not None:
         rows.append({"name": f"fused_vs_reference/spmd/N{clients}",
                      "us_per_call": spmd_wall / rounds * 1e6,
@@ -247,6 +285,14 @@ def main() -> None:
               f"{s['max_metric_delta']['spmd']:.2e})  -> {args.spmd_out}")
     else:
         print(f"spmd     : skipped -> {args.spmd_out}")
+    ov = next((r["overlap"] for r in rows if "overlap" in r), None)
+    if ov is not None:
+        print(f"overlap  : {ov['engine']} staging pipeline on "
+              f"{ov['on']['rounds_per_sec']:.1f} vs off "
+              f"{ov['off']['rounds_per_sec']:.1f} rounds/s "
+              f"({ov['speedup']:.2f}x, overlap fraction "
+              f"{ov['on']['overlap_fraction']:.2f}, on/off delta "
+              f"{ov['on_off_metric_delta']:.1e})")
     fs = by_leg.get("spmd_fsdp")
     if fs is not None:
         print(f"spmd_fsdp: {fs['spmd_fsdp']['rounds_per_sec']:.1f} rounds/s "
@@ -262,6 +308,9 @@ def main() -> None:
             deltas["spmd"] = s["max_metric_delta"]["spmd"]
         if fs is not None:
             deltas["spmd_fsdp"] = fs["max_metric_delta"]["spmd_fsdp"]
+        if ov is not None:
+            deltas["overlap"] = max(ov["max_metric_delta_vs_reference"],
+                                    ov["on_off_metric_delta"])
         over = {k: v for k, v in deltas.items() if v > args.max_delta}
         if over:
             import sys

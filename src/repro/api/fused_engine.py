@@ -22,12 +22,17 @@ reference engine for it.
 
 ``repro.api.spmd_engine.SpmdEngine`` subclasses this engine and overrides
 the :meth:`FusedEngine._compile_chunk` (jit with mesh shardings),
-:meth:`FusedEngine._put_batch` (host batch -> sharded device placement)
-and :meth:`FusedEngine._stack_carry` (replicated carry) hooks to stage
-the identical round body with mesh shardings.
+:meth:`FusedEngine._put_batch` / :meth:`FusedEngine._put_ts` (host
+staging -> sharded, possibly process-global, device placement),
+:meth:`FusedEngine._stack_carry` (recipe-sharded carry) and
+:meth:`FusedEngine._fetch_carry` / :meth:`FusedEngine._host_losses`
+(multi-host readback) hooks to stage the identical round body with mesh
+shardings — including the overlapped staging pipeline, which calls the
+same hooks from its producer thread.
 """
 from __future__ import annotations
 
+import itertools
 import os
 from typing import Callable, Dict, List, Tuple
 
@@ -43,6 +48,7 @@ from repro.core.splitee import stack_pytrees, unstack_pytrees
 from repro.core.spmd import make_cohort_train_step
 from repro.core.strategies import RoundMetrics
 from repro.data.pipeline import effective_batch_size, prestage_batches
+from repro.data.staging import StagedChunkPipeline
 
 
 @register_engine("fused")
@@ -52,8 +58,26 @@ class FusedEngine(Engine):
     #: run's whole pre-staged ``[rounds, k, E, B, ...]`` tensor would exceed
     #: it, the run is split into budget-sized chunks instead of silently
     #: staging everything (full-size configs OOM before the first step
-    #: otherwise).  Override per instance, or via REPRO_STAGE_BUDGET_MB.
+    #: otherwise).  Override per instance, or via REPRO_STAGE_BUDGET_MB;
+    #: must be strictly positive either way.
     stage_budget_bytes: int = 1 << 30
+
+    #: overlapped staging: stage chunk n+1 on a background thread (a
+    #: depth-2 double buffer, ``data.staging.StagedChunkPipeline``) while
+    #: the jitted scan for chunk n runs, and fetch chunk n's losses only
+    #: after chunk n+1 is dispatched.  Bit-identical trajectory either way
+    #: (tests/test_staging.py); REPRO_OVERLAP_STAGING=0 is the kill switch.
+    overlap_staging: bool = True
+
+    #: staged chunks resident at once under the pipeline (2 = double
+    #: buffer: one in compute, one staged ahead)
+    pipeline_depth: int = 2
+
+    #: with overlapped staging, a budget-sized single-chunk plan is
+    #: subdivided into up to this many chunks so the double buffer has
+    #: work to overlap (an explicit ``chunk_rounds`` is never subdivided;
+    #: chunking is trajectory-neutral, see docs/ENGINES.md)
+    pipeline_min_chunks: int = 4
 
     def __init__(self, ctx: SessionContext):
         super().__init__(ctx)
@@ -61,7 +85,15 @@ class FusedEngine(Engine):
             ctx.profile.split_layers)
         self._counts: Dict[int, int] = {li: len(v)
                                         for li, v in self._lanes.items()}
+        #: client index -> (cohort cut layer, lane position in the cohort)
+        self._lane_pos: Dict[int, Tuple[int, int]] = {
+            i: (li, j) for li in self._cohort_lis
+            for j, i in enumerate(self._lanes[li])}
         self._chunk_fns: Dict[int, Callable] = {}
+        #: staging/overlap accounting for the most recent :meth:`run`
+        #: (``data.staging.StageStats.as_dict`` — the bench's overlap leg
+        #: reads it)
+        self.last_stage_stats: Dict = {}
 
     @classmethod
     def supports(cls, ctx: SessionContext):
@@ -155,21 +187,33 @@ class FusedEngine(Engine):
 
     def _stage_chunk(self, rounds: int, local_epochs: int):
         """Draw the chunk's minibatches through the session's data cursor
-        (the same sequence the reference engine would consume) and stack
-        them as ``{li: [rounds, k, E, B, ...]}`` device arrays."""
+        (the same per-client sequence the reference engine would consume,
+        in client-index order) straight into preallocated
+        ``{li: [rounds, k, E, B, ...]}`` cohort buffers — one host copy
+        per batch, no list/``np.stack``/lane-stack intermediates — then
+        hand each buffer to :meth:`_put_batch`."""
         def drawn(i):
             while True:
                 yield self.ctx.data.draw(i)
 
-        per_client = [prestage_batches(drawn(i), rounds, local_epochs)
-                      for i in range(self.ctx.N)]
-        xs, ys = {}, {}
-        for li in self._cohort_lis:
-            lanes = self._lanes[li]
-            xs[li] = self._put_batch(np.stack([per_client[i][0]
-                                               for i in lanes], axis=2), li)
-            ys[li] = self._put_batch(np.stack([per_client[i][1]
-                                               for i in lanes], axis=2), li)
+        bufs: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        for i in range(self.ctx.N):
+            li, j = self._lane_pos[i]
+            it = drawn(i)
+            first = next(it)          # fixes the staged shapes/dtypes
+            if li not in bufs:
+                x0, y0 = first
+                k = self._counts[li]
+                bufs[li] = (
+                    np.empty((rounds, local_epochs, k, *x0.shape), x0.dtype),
+                    np.empty((rounds, local_epochs, k, *y0.shape), y0.dtype))
+            bx, by = bufs[li]
+            prestage_batches(itertools.chain([first], it), rounds,
+                             local_epochs, out=(bx[:, :, j], by[:, :, j]))
+        xs = {li: self._put_batch(bufs[li][0], li)
+              for li in self._cohort_lis}
+        ys = {li: self._put_batch(bufs[li][1], li)
+              for li in self._cohort_lis}
         return xs, ys
 
     def _round_stage_bytes(self, local_epochs: int) -> int:
@@ -187,7 +231,9 @@ class FusedEngine(Engine):
         """The default chunk size when the caller passed ``chunk_rounds=0``:
         as many rounds as fit the staging budget (at least one).  An
         explicit per-instance ``stage_budget_bytes`` wins over the
-        REPRO_STAGE_BUDGET_MB environment default."""
+        REPRO_STAGE_BUDGET_MB environment default.  Either knob must be
+        strictly positive — a zero/negative budget used to silently
+        degrade to ``chunk_rounds=1``, hiding the misconfiguration."""
         budget = self.stage_budget_bytes
         env = os.environ.get("REPRO_STAGE_BUDGET_MB")
         if env and budget == FusedEngine.stage_budget_bytes:
@@ -197,8 +243,50 @@ class FusedEngine(Engine):
                 raise ValueError(
                     f"REPRO_STAGE_BUDGET_MB={env!r} is not an integer "
                     f"megabyte count") from None
+            if budget <= 0:
+                raise ValueError(
+                    f"REPRO_STAGE_BUDGET_MB={env} must be strictly "
+                    f"positive: a 0/negative staging budget cannot hold "
+                    f"even one round of pre-staged batches")
+        if budget <= 0:
+            raise ValueError(
+                f"stage_budget_bytes={budget} must be strictly positive: "
+                f"a 0/negative staging budget cannot hold even one round "
+                f"of pre-staged batches (set FusedEngine.stage_budget_bytes "
+                f"or REPRO_STAGE_BUDGET_MB to a real byte/MB count)")
         per_round = max(1, self._round_stage_bytes(local_epochs))
         return max(1, min(rounds, budget // per_round))
+
+    def _overlap_enabled(self) -> bool:
+        """The ``overlap_staging`` knob, with REPRO_OVERLAP_STAGING (0 /
+        false / off disables, anything else enables) taking precedence."""
+        env = os.environ.get("REPRO_OVERLAP_STAGING")
+        if env is not None:
+            return env.strip().lower() not in ("0", "false", "off", "no")
+        return self.overlap_staging
+
+    def _chunk_plan(self, rounds: int, chunk_rounds: int,
+                    local_epochs: int, overlap: bool) -> List[int]:
+        """The run's chunk sizes in execution order.  An explicit
+        ``chunk_rounds`` is honored exactly; the auto default is the
+        staging-budget chunk, subdivided (equal-ish, for compile-cache
+        reuse) into up to ``pipeline_min_chunks`` pieces when overlap is
+        on and the budget would cover the run in one chunk — a pipeline
+        with a single chunk has nothing to overlap.  Chunk boundaries
+        never change the trajectory (docs/ENGINES.md, tested)."""
+        chunk = (chunk_rounds if chunk_rounds > 0
+                 else self._auto_chunk_rounds(rounds, local_epochs))
+        if (chunk_rounds <= 0 and overlap and chunk >= rounds
+                and rounds >= 2):
+            pieces = min(self.pipeline_min_chunks, rounds)
+            chunk = -(-rounds // pieces)                   # ceil
+        plan = []
+        done = 0
+        while done < rounds:
+            n = min(chunk, rounds - done)
+            plan.append(n)
+            done += n
+        return plan
 
     def _stack_carry(self, clients, copts, servers, sopts):
         model = self.ctx.model
@@ -222,39 +310,28 @@ class FusedEngine(Engine):
                 clients[i], copts[i] = cs[j], co[j]
                 servers[i], sopts[i] = ss[j], so[j]
 
-    # ------------------------------------------------------------ training
-    def run(self, state: TrainState, rounds: int, local_epochs: int = 1,
-            log_every: int = 0, chunk_rounds: int = 0
-            ) -> Tuple[TrainState, List[RoundMetrics]]:
-        """``chunk_rounds`` bounds how many rounds of pre-staged data are
-        resident at once (0 = auto: the whole run when it fits the staging
-        budget, budget-sized chunks otherwise — chunking never changes the
-        trajectory, see docs/ENGINES.md)."""
-        self.ctx.data.align(state.batches_drawn)
-        chunk = (chunk_rounds if chunk_rounds > 0
-                 else self._auto_chunk_rounds(rounds, local_epochs))
-        metrics: List[RoundMetrics] = []
-        done = 0
-        while done < rounds:
-            n = min(chunk, rounds - done)
-            state, ms = self._run_chunk(state, n, local_epochs, log_every)
-            metrics.extend(ms)
-            done += n
-        return state, metrics
+    def _fetch_carry(self, carry):
+        """Hook: the run's final device carry, host-readable.  Identity
+        here (single-process arrays are always addressable); the spmd
+        engine reshards to replicated + fetches when the carry spans
+        processes."""
+        return carry
 
-    def _run_chunk(self, state: TrainState, n: int, local_epochs: int,
-                   log_every: int) -> Tuple[TrainState, List[RoundMetrics]]:
-        clients, copts = list(state.clients), list(state.client_opts)
-        servers, sopts = list(state.servers), list(state.server_opts)
-        t0 = int(state.round)
+    def _put_ts(self, t: int, n: int):
+        """Hook: the chunk's round-index vector ``[t, t+n)`` as a device
+        array.  The spmd engine overrides this to build a process-global
+        replicated array under multi-host runs."""
+        return jnp.arange(t, t + n, dtype=jnp.int32)
 
-        xs, ys = self._stage_chunk(n, local_epochs)
-        ts = jnp.arange(t0, t0 + n, dtype=jnp.int32)
-        carry, (closs, sloss) = self._chunk_fn(local_epochs)(
-            self._stack_carry(clients, copts, servers, sopts), ts, xs, ys)
-        self._unstack_carry(carry, clients, copts, servers, sopts)
+    def _host_losses(self, closs, sloss):
+        """Hook: a chunk's stacked per-round losses as host arrays (the
+        one blocking sync per chunk).  The spmd engine overrides this to
+        read a local shard of the replicated outputs under multi-host."""
+        return np.asarray(closs), np.asarray(sloss)
 
-        closs, sloss = np.asarray(closs), np.asarray(sloss)  # one sync
+    def _chunk_metrics(self, t0: int, n: int, closs, sloss,
+                       log_every: int) -> List[RoundMetrics]:
+        closs, sloss = self._host_losses(closs, sloss)       # one sync/chunk
         metrics = []
         for r in range(n):
             m = RoundMetrics(t0 + r, float(closs[r]), float(sloss[r]))
@@ -262,11 +339,68 @@ class FusedEngine(Engine):
             if log_every and (m.round % log_every == 0):
                 print(f"round {m.round:4d}  client_loss {m.client_loss:.4f}"
                       f"  server_loss {m.server_loss:.4f}")
+        return metrics
 
+    # ------------------------------------------------------------ training
+    def run(self, state: TrainState, rounds: int, local_epochs: int = 1,
+            log_every: int = 0, chunk_rounds: int = 0
+            ) -> Tuple[TrainState, List[RoundMetrics]]:
+        """``chunk_rounds`` bounds how many rounds of pre-staged data are
+        resident at once (0 = auto: budget-sized chunks, subdivided for the
+        staging pipeline — chunking never changes the trajectory, see
+        docs/ENGINES.md).
+
+        Chunks execute as a producer/consumer pipeline: the carry is
+        stacked and placed once per run and stays device-resident across
+        chunks; a background producer stages chunk n+1 (draw + fill +
+        ``device_put``) while the jitted scan for chunk n runs, and the
+        host sync on chunk n's losses happens only after chunk n+1 is
+        dispatched — JAX dispatch is async, so the old per-chunk
+        ``np.asarray`` used to serialize staging against compute."""
+        if rounds <= 0:
+            return state, []
+        self.ctx.data.align(state.batches_drawn)
+        overlap = self._overlap_enabled()
+        plan = self._chunk_plan(rounds, chunk_rounds, local_epochs, overlap)
+        fn = self._chunk_fn(local_epochs)
+        clients, copts = list(state.clients), list(state.client_opts)
+        servers, sopts = list(state.servers), list(state.server_opts)
+        carry = self._stack_carry(clients, copts, servers, sopts)
+        t0 = int(state.round)
+
+        pipeline = StagedChunkPipeline(
+            lambda n: self._stage_chunk(n, local_epochs), plan,
+            depth=self.pipeline_depth, overlap=overlap)
+        metrics: List[RoundMetrics] = []
+        pending = None                  # (chunk start round, n, closs, sloss)
+        try:
+            t = t0
+            for n in plan:
+                xs, ys = pipeline.get()
+                ts = self._put_ts(t, n)
+                # async dispatch: this chunk's scan starts on device while
+                # the producer stages the next chunk ...
+                carry, (closs, sloss) = fn(carry, ts, xs, ys)
+                # ... and only then does the host block on the PREVIOUS
+                # chunk's losses (syncing this chunk's would serialize the
+                # whole loop again)
+                if pending is not None:
+                    metrics.extend(self._chunk_metrics(*pending, log_every))
+                    pipeline.release()
+                pending = (t, n, closs, sloss)
+                t += n
+            metrics.extend(self._chunk_metrics(*pending, log_every))
+            pipeline.release()
+        finally:
+            pipeline.close()
+            self.last_stage_stats = pipeline.stats.as_dict()
+
+        self._unstack_carry(self._fetch_carry(carry), clients, copts,
+                            servers, sopts)
         new_state = state.replace(
             clients=tuple(clients), client_opts=tuple(copts),
             servers=tuple(servers), server_opts=tuple(sopts),
-            round=jnp.asarray(t0 + n, jnp.int32),
+            round=jnp.asarray(t0 + rounds, jnp.int32),
             batches_drawn=state.batches_drawn
-            + jnp.asarray(n * local_epochs, jnp.int32))
+            + jnp.asarray(rounds * local_epochs, jnp.int32))
         return new_state, metrics

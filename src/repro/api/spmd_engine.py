@@ -41,6 +41,19 @@ device.  Recipes: ``TrainSession(..., recipe=...)`` — a name from
 ``"fsdp-off"``, ``"replicate"``, ...) or a ``ShardingRecipe`` instance.  On
 a CPU container, expose fake devices first:
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+
+**Multi-host**: after ``jax.distributed.initialize`` (see
+``launch.distributed`` / ``launch.train --distributed``) ``jax.devices()``
+is the *global* device list, so the default data mesh — and any
+``launch.mesh`` helper — spans every process.  Every process draws the
+identical seeded batch stream (the data layer is deterministic, so no
+cross-host data exchange is needed) and the engine assembles global
+arrays from the host-replicated staging buffers via
+``jax.make_array_from_process_local_data``: each process extracts and
+uploads only the shard rows its local devices own.  The carry is placed
+the same way, and fetched back through a replicating reshard so the
+returned ``TrainState`` holds host arrays on every process
+(tests/test_distributed.py asserts 2-process ≡ 1-process parity).
 """
 from __future__ import annotations
 
@@ -203,15 +216,59 @@ class SpmdEngine(FusedEngine):
                                       (self._replicated, self._replicated)),
                        donate_argnums=(0,))
 
+    def _put_global(self, arr, sharding: NamedSharding):
+        """Host array -> a (possibly process-spanning) ``sharding``.
+
+        Single-process: a plain ``device_put``.  Multi-process: every
+        process holds the identical full host copy (the data layer's
+        seeded draws and the host-side carry stacking are deterministic),
+        so ``jax.make_array_from_process_local_data`` with
+        ``global_shape == arr.shape`` lets each process extract and
+        upload exactly the shard rows its local devices own — no
+        cross-host data exchange."""
+        if jax.process_count() == 1:
+            return jax.device_put(arr, sharding)
+        arr = np.asarray(arr)
+        return jax.make_array_from_process_local_data(
+            sharding, arr, global_shape=arr.shape)
+
     def _put_batch(self, arr, li: int):
         """Host-staged batch numpy -> its cohort's sharding directly, so
         each device receives only its lanes' and batch rows' slices (never
         materializing the whole chunk on one device)."""
-        return jax.device_put(arr, self._batch_shardings[li])
+        return self._put_global(arr, self._batch_shardings[li])
+
+    def _put_ts(self, t: int, n: int):
+        ts = np.arange(t, t + n, dtype=np.int32)
+        return self._put_global(ts, self._replicated)
 
     def _stack_carry(self, clients, copts, servers, sopts):
         """Place the stacked carry into its recipe shardings up front
         (avoids an implicit single-device -> sharded reshard inside the
-        jit and keeps donation effective)."""
+        jit and keeps donation effective).  Multi-process runs place each
+        leaf from its host-replicated copy, like the batches."""
         carry = super()._stack_carry(clients, copts, servers, sopts)
-        return jax.device_put(carry, self._carry_shardings)
+        if jax.process_count() == 1:
+            return jax.device_put(carry, self._carry_shardings)
+        return jax.tree.map(self._put_global, carry, self._carry_shardings)
+
+    def _fetch_carry(self, carry):
+        """Multi-process carries have non-addressable shards, so the
+        run-final carry is resharded to fully-replicated (an in-graph
+        cross-host all-gather) and pulled to host numpy — reading one
+        addressable shard of a replicated array is the whole value —
+        before the engine unstacks per-client states.  Single-process
+        carries are already fully addressable: no copy."""
+        if jax.process_count() == 1:
+            return carry
+        replicate = jax.jit(
+            lambda c: c,
+            out_shardings=jax.tree.map(lambda _: self._replicated, carry))
+        return jax.tree.map(lambda a: np.asarray(a.addressable_data(0)),
+                            replicate(carry))
+
+    def _host_losses(self, closs, sloss):
+        if jax.process_count() == 1:
+            return super()._host_losses(closs, sloss)
+        return (np.asarray(closs.addressable_data(0)),
+                np.asarray(sloss.addressable_data(0)))

@@ -4,7 +4,7 @@ fused SPMD Hetero-SplitEE step (client group g owns slice g of the batch)."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, List, Sequence, Tuple
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -52,22 +52,34 @@ def batch_iterator(x: np.ndarray, y: np.ndarray, batch_size: int, *,
 
 
 def prestage_batches(it: Iterator[Tuple[np.ndarray, np.ndarray]],
-                     rounds: int, local_epochs: int
+                     rounds: int, local_epochs: int,
+                     out: Optional[Tuple[np.ndarray, np.ndarray]] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
     """Draw ``rounds * local_epochs`` consecutive batches from a
-    :func:`batch_iterator` and stack them as ``[rounds, local_epochs, B, ...]``
-    host tensors, ready to be device-put once and scanned over.  Consuming the
+    :func:`batch_iterator` into ``[rounds, local_epochs, B, ...]`` host
+    tensors, ready to be device-put once and scanned over.  Consuming the
     *same* iterator the reference engine would consume keeps the minibatch
     sequence bit-identical between engines (the equivalence contract in
-    docs/ENGINES.md)."""
-    xs, ys = [], []
-    for _ in range(rounds * local_epochs):
-        x, y = next(it)
-        xs.append(x)
-        ys.append(y)
-    x0, y0 = xs[0], ys[0]
-    bx = np.stack(xs).reshape(rounds, local_epochs, *x0.shape)
-    by = np.stack(ys).reshape(rounds, local_epochs, *y0.shape)
+    docs/ENGINES.md).
+
+    Each drawn batch is written straight into its slot — one host copy per
+    batch, instead of the list + ``np.stack`` + ``reshape`` path that held
+    two full extra copies of every chunk.  ``out=(bx, by)`` fills
+    caller-owned buffers in place (the engines pass views into the
+    preallocated cohort-stacked chunk, eliminating the lane-stacking copy
+    as well); buffers may be non-contiguous views but must have the
+    ``[rounds, local_epochs, ...batch shape]`` leading layout."""
+    bx = by = None
+    if out is not None:
+        bx, by = out
+    for r in range(rounds):
+        for e in range(local_epochs):
+            x, y = next(it)
+            if bx is None:
+                bx = np.empty((rounds, local_epochs, *x.shape), x.dtype)
+                by = np.empty((rounds, local_epochs, *y.shape), y.dtype)
+            bx[r, e] = x
+            by[r, e] = y
     return bx, by
 
 

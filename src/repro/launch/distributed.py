@@ -1,0 +1,138 @@
+"""Multi-host launch wiring: ``jax.distributed`` initialization + the
+latency-hiding XLA flags, resolved from CLI flags or environment.
+
+The spmd engine itself is topology-agnostic — it shards over whatever
+``jax.devices()`` reports.  Going past one process is purely a launch
+concern, handled here in two pre-``import jax`` steps (mirroring
+``launch.hostdevices``):
+
+  1. :func:`setup_from_argv` scans ``sys.argv`` for
+     ``--distributed --coordinator HOST:PORT --num-processes N
+     --process-id I`` (env fallbacks ``REPRO_DISTRIBUTED``,
+     ``REPRO_COORDINATOR``, ``REPRO_NUM_PROCESSES``,
+     ``REPRO_PROCESS_ID``) and, when a distributed run is requested,
+     appends the async-collective / latency-hiding scheduler XLA flags
+     to ``XLA_FLAGS`` so the Eq. (1) lane-reduce and the recipes' FSDP
+     all-gathers overlap compute instead of serializing it.
+  2. :func:`maybe_initialize` (first thing in ``main()``, before any
+     jax computation) configures the gloo CPU collectives backend and
+     calls ``jax.distributed.initialize`` — after which
+     ``jax.devices()`` is the *global* device list and every
+     ``launch.mesh`` helper spans all processes.
+
+Unset coordinator/count/id fields are left to jax's own cluster
+auto-detection (SLURM, GKE, ...); on a bare multi-host launch all three
+must be given.  See tests/test_distributed.py for the 2-process CPU
+parity harness and docs/ENGINES.md for the launch recipe.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+#: XLA flags applied to every distributed launch: schedule collectives
+#: concurrently with compute (latency-hiding scheduler + a dedicated
+#: high-priority async stream) and pipeline the collectives the spmd
+#: engine's sharded step emits (grad all-reduce over the batch axes,
+#: FSDP all-gather / reduce-scatter around sharded params).  GPU-prefixed
+#: but parse everywhere; XLA:CPU ignores the scheduler hints.
+ASYNC_COLLECTIVE_XLA_FLAGS: Sequence[str] = (
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+    "--xla_gpu_enable_pipelined_all_reduce=true",
+    "--xla_gpu_enable_pipelined_all_gather=true",
+    "--xla_gpu_enable_pipelined_reduce_scatter=true",
+)
+
+
+@dataclass(frozen=True)
+class DistributedOptions:
+    """A launch's resolved multi-host request (``enabled=False`` for the
+    ordinary single-process run)."""
+
+    enabled: bool = False
+    coordinator: Optional[str] = None      # "host:port"
+    num_processes: Optional[int] = None
+    process_id: Optional[int] = None
+
+
+def _argv_value(flag: str, argv: Sequence[str]) -> Optional[str]:
+    for i, a in enumerate(argv):
+        if a == flag and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith(flag + "="):
+            return a.split("=", 1)[1]
+    return None
+
+
+def _truthy(v: Optional[str]) -> bool:
+    return v is not None and v.strip().lower() not in ("", "0", "false",
+                                                       "off", "no")
+
+
+def resolve_options(argv: Optional[Sequence[str]] = None
+                    ) -> DistributedOptions:
+    """The launch's :class:`DistributedOptions` from argv flags, with
+    ``REPRO_*`` environment fallbacks (so process launchers can export
+    instead of templating per-rank command lines)."""
+    argv = sys.argv if argv is None else argv
+    coord = (_argv_value("--coordinator", argv)
+             or os.environ.get("REPRO_COORDINATOR"))
+    nproc = (_argv_value("--num-processes", argv)
+             or os.environ.get("REPRO_NUM_PROCESSES"))
+    pid = (_argv_value("--process-id", argv)
+           or os.environ.get("REPRO_PROCESS_ID"))
+    enabled = ("--distributed" in argv
+               or _truthy(os.environ.get("REPRO_DISTRIBUTED"))
+               or coord is not None)
+    try:
+        return DistributedOptions(
+            enabled=enabled, coordinator=coord,
+            num_processes=None if nproc is None else int(nproc),
+            process_id=None if pid is None else int(pid))
+    except ValueError:
+        # malformed numbers: let argparse produce the real error message
+        return DistributedOptions(enabled=enabled, coordinator=coord)
+
+
+def setup_from_argv(argv: Optional[Sequence[str]] = None
+                    ) -> DistributedOptions:
+    """Pre-``import jax`` step: resolve the launch's options and, for a
+    distributed run, append :data:`ASYNC_COLLECTIVE_XLA_FLAGS` to
+    ``XLA_FLAGS`` (idempotent)."""
+    opts = resolve_options(argv)
+    if opts.enabled:
+        flags = os.environ.get("XLA_FLAGS", "")
+        extra = [f for f in ASYNC_COLLECTIVE_XLA_FLAGS
+                 if f.split("=", 1)[0] not in flags]
+        if extra:
+            os.environ["XLA_FLAGS"] = " ".join([flags, *extra]).strip()
+    return opts
+
+
+def maybe_initialize(opts: DistributedOptions) -> None:
+    """Bring the process into the ``jax.distributed`` cluster (no-op when
+    the launch is not distributed).  Must run before any jax computation:
+    the collectives backend and the global device list are locked at
+    first backend initialization."""
+    if not opts.enabled:
+        return
+    import jax
+
+    # CPU collectives need an explicit cross-process implementation; gloo
+    # ships with jaxlib.  TPU/GPU backends ignore this setting.
+    jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    jax.distributed.initialize(coordinator_address=opts.coordinator,
+                               num_processes=opts.num_processes,
+                               process_id=opts.process_id)
+
+
+def is_coordinator() -> bool:
+    """True on the process that owns shared-filesystem side effects
+    (checkpoints, driver sidecars): process 0, or any process of a
+    non-distributed run."""
+    import jax
+
+    return jax.process_index() == 0

@@ -20,6 +20,13 @@ Axes the rest of the stack understands:
 ``batch_axes`` / ``lane_axis`` accept either a live ``jax`` mesh or a
 ``MeshSpec``, so sharding recipes can be computed and validated (e.g. the
 conformance tests over every registered arch) without faking devices.
+
+Every helper builds over ``jax.devices()`` — which, after
+``jax.distributed.initialize`` (``launch.distributed``), is the *global*
+device list across all processes: the same ``make_lane_host_mesh(2)``
+call yields a process-spanning mesh on a 2-host launch with no code
+change (the spmd engine places process-local shards into it via
+``jax.make_array_from_process_local_data``).
 """
 from __future__ import annotations
 

@@ -50,10 +50,13 @@ from __future__ import annotations
 import glob
 import os
 
-# must run before jax initializes: fake host devices for the spmd engine
+# must run before jax initializes: fake host devices for the spmd engine,
+# and the multi-host XLA flags + coordinator options for --distributed
+from repro.launch import distributed as distributed_mod
 from repro.launch.hostdevices import force_host_devices
 
 force_host_devices("--host-devices")
+_DIST = distributed_mod.setup_from_argv()
 
 import argparse
 import json
@@ -212,6 +215,18 @@ def main() -> None:
                          "lanes instead of replicating them)")
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force N fake CPU devices (consumed pre-import)")
+    ap.add_argument("--distributed", action="store_true",
+                    help="multi-host run: jax.distributed.initialize "
+                         "before training, meshes over the global device "
+                         "list (consumed pre-argparse; env fallbacks "
+                         "REPRO_DISTRIBUTED/REPRO_COORDINATOR/...)")
+    ap.add_argument("--coordinator", default=None,
+                    help="coordinator address host:port for --distributed "
+                         "(implies it); unset = jax cluster auto-detection")
+    ap.add_argument("--num-processes", type=int, default=None,
+                    help="total process count for --distributed")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="this process's rank for --distributed")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--save-every", type=int, default=0)
     ap.add_argument("--keep-last", type=int, default=3)
@@ -226,6 +241,11 @@ def main() -> None:
                     help="entropy threshold for the adaptive eval")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    # before any jax computation: join the multi-host cluster so every
+    # mesh below spans the global device list
+    distributed_mod.maybe_initialize(_DIST)
+    coordinator = distributed_mod.is_coordinator()
 
     arch_cfg = resolve_arch_config(args)
     if args.splits:
@@ -313,15 +333,21 @@ def main() -> None:
             f"[{model.name}]" if args.arch else f"model={args.model}")
     print(f"{what}  clients={args.clients}  splits={splits}  "
           f"strategy={args.strategy}  grad_mode={args.grad_mode}")
-    print(f"devices={len(jax.devices())}  engine={session.engine_name}"
+    print(f"devices={len(jax.devices())}"
+          + (f" ({jax.process_count()} processes, "
+             f"rank {jax.process_index()})"
+             if jax.process_count() > 1 else "")
+          + f"  engine={session.engine_name}"
           + (f"  recipe={session.ctx.recipe_name}"
              if session.engine.name == "spmd" else "")
           + (f"  [resumed at round {session.round}]" if resumed else ""))
 
-    if args.checkpoint_dir:
-        os.makedirs(args.checkpoint_dir, exist_ok=True)
-        with open(os.path.join(args.checkpoint_dir, "driver.json"),
-                  "w") as f:
+    # checkpoints and sidecars are shared-filesystem side effects: only
+    # the coordinator process writes them (every process still restores)
+    ckpt_dir = args.checkpoint_dir if coordinator else ""
+    if ckpt_dir:
+        os.makedirs(ckpt_dir, exist_ok=True)
+        with open(os.path.join(ckpt_dir, "driver.json"), "w") as f:
             json.dump(driver_knobs(args, splits), f, indent=1)
 
     remaining = args.rounds - session.round
@@ -330,13 +356,13 @@ def main() -> None:
               f"--rounds {args.rounds}; nothing to train")
     else:
         # no --save-every but a checkpoint dir: save once at completion
-        save_every = args.save_every or (remaining if args.checkpoint_dir
-                                         else 0)
+        # (non-coordinator ranks never save, whatever the flags say)
+        save_every = (args.save_every or remaining) if ckpt_dir else 0
         t0 = time.time()
         session.train(remaining, local_epochs=args.local_epochs,
                       log_every=args.log_every,
                       save_every=save_every,
-                      save_dir=args.checkpoint_dir or None,
+                      save_dir=ckpt_dir or None,
                       keep_last=args.keep_last)
         dt = time.time() - t0
         m = session.history[-1]
@@ -344,8 +370,8 @@ def main() -> None:
               f"({remaining / dt:.2f} rounds/s)  "
               f"client_loss {m.client_loss:.4f}  "
               f"server_loss {m.server_loss:.4f}")
-        if args.checkpoint_dir:
-            print(f"checkpoints -> {args.checkpoint_dir} "
+        if ckpt_dir:
+            print(f"checkpoints -> {ckpt_dir} "
                   f"(newest: round {session.round})")
 
     ev = session.evaluate(xt, yt, batch_size=512)

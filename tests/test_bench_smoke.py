@@ -75,6 +75,29 @@ def test_spmd_benchmark_manifest_records_execution_path(bench_artifacts):
         assert "skipped" in data["spmd"]
 
 
+def test_overlap_leg_reports_fraction_and_zero_delta(bench_artifacts):
+    """The staging-pipeline leg always runs (on the spmd engine when a
+    mesh exists, else fused): both on and off walls are real, the on/off
+    trajectories are identical (the pipeline only reorders host work),
+    and the stats expose a bounded overlap fraction."""
+    _, _, spmd_out, _ = bench_artifacts
+    with open(spmd_out) as f:
+        data = json.load(f)
+    ov = data["overlap"]
+    expected = "fused" if "skipped" in data["spmd"] else "spmd"
+    assert ov["engine"] == expected
+    for leg in ("on", "off"):
+        assert ov[leg]["wall_s"] > 0
+        assert ov[leg]["chunks"] >= 1
+        assert 0.0 <= ov[leg]["overlap_fraction"] <= 1.0
+    assert ov["off"]["overlap_fraction"] == 0.0     # serial staging hides 0
+    assert ov["on"]["overlap"] and not ov["off"]["overlap"]
+    assert ov["on_off_metric_delta"] == 0.0
+    assert ov["max_metric_delta_vs_reference"] < 1e-4
+    if "stage_stats" in data.get("spmd", {}):
+        assert data["spmd"]["stage_stats"]["chunks"] >= 1
+
+
 def test_spmd_fsdp_manifest_real_or_skip_reason(bench_artifacts):
     """The recipe-sharded leg's manifest (BENCH_spmd_fsdp.json) is
     real-or-skip-reason like the spmd one, records the recipe and lanes

@@ -1,0 +1,155 @@
+"""Multi-host scale-out smoke: a real 2-process CPU ``jax.distributed``
+training (2 fake devices per process, 4 global) through the
+``repro.launch.train`` CLI must land on exactly the same losses and
+accuracies as the identical single-process 4-device run — the spmd
+engine's process-local staging (``make_array_from_process_local_data``)
+and replicating carry fetch are pure layout.  Also pins the
+``launch.distributed`` option resolution (argv flags, ``REPRO_*`` env
+fallbacks, XLA flag injection) and the coordinator-only checkpoint
+gating.  CI runs this module as the ``distributed-smoke`` job.
+"""
+import os
+import re
+import socket
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch.distributed import (ASYNC_COLLECTIVE_XLA_FLAGS,
+                                      resolve_options, setup_from_argv)
+
+TOL = 1e-4
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+pytestmark = pytest.mark.distributed
+
+
+# ---------------------------------------------------------------------------
+# option resolution (no jax, no subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_options_from_argv():
+    o = resolve_options(["prog", "--distributed",
+                         "--coordinator", "10.0.0.1:1234",
+                         "--num-processes=4", "--process-id", "2"])
+    assert o.enabled and o.coordinator == "10.0.0.1:1234"
+    assert o.num_processes == 4 and o.process_id == 2
+    assert not resolve_options(["prog", "--rounds", "5"]).enabled
+    # --coordinator alone implies a distributed run
+    assert resolve_options(["prog", "--coordinator=h:1"]).enabled
+
+
+def test_resolve_options_env_fallbacks(monkeypatch):
+    monkeypatch.setenv("REPRO_DISTRIBUTED", "1")
+    monkeypatch.setenv("REPRO_COORDINATOR", "h:99")
+    monkeypatch.setenv("REPRO_NUM_PROCESSES", "2")
+    monkeypatch.setenv("REPRO_PROCESS_ID", "1")
+    o = resolve_options(["prog"])
+    assert o.enabled and o.coordinator == "h:99"
+    assert o.num_processes == 2 and o.process_id == 1
+    monkeypatch.setenv("REPRO_DISTRIBUTED", "0")
+    monkeypatch.delenv("REPRO_COORDINATOR")
+    assert not resolve_options(["prog"]).enabled
+
+
+def test_setup_appends_xla_flags_once(monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+    assert setup_from_argv(["prog"]).enabled is False
+    assert "latency_hiding" not in os.environ["XLA_FLAGS"]   # non-distributed
+    setup_from_argv(["prog", "--distributed"])
+    flags = os.environ["XLA_FLAGS"]
+    for f in ASYNC_COLLECTIVE_XLA_FLAGS:
+        assert f in flags
+    assert "--xla_force_host_platform_device_count=2" in flags
+    setup_from_argv(["prog", "--distributed"])               # idempotent
+    assert os.environ["XLA_FLAGS"] == flags
+
+
+# ---------------------------------------------------------------------------
+# the 2-process parity run
+# ---------------------------------------------------------------------------
+
+ARGS = ["--model", "mlp", "--clients", "4", "--rounds", "4", "--batch", "32",
+        "--train-size", "256", "--test-size", "64", "--engine", "spmd",
+        "--log-every", "0", "--save-every", "2"]
+
+
+def _launch(extra):
+    env = {"PYTHONPATH": "src", "PATH": os.environ.get("PATH", ""),
+           "HOME": os.environ.get("HOME", "/tmp"), "JAX_PLATFORMS": "cpu"}
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.train", *ARGS, *extra],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env, cwd=ROOT)
+
+
+def _finish(proc, timeout=600):
+    out, _ = proc.communicate(timeout=timeout)
+    assert proc.returncode == 0, out[-4000:]
+    return out
+
+
+def _parse(out):
+    """(client_loss, server_loss, [(client_acc, server_acc, adaptive), ...])."""
+    m = re.search(r"client_loss ([\d.]+)\s+server_loss ([\d.]+)", out)
+    assert m, out[-2000:]
+    accs = re.findall(r"client_acc ([\d.]+)\s+server_acc ([\d.]+)\s+"
+                      r"adaptive_acc ([\d.]+)", out)
+    assert len(accs) == 4, out[-2000:]
+    return (float(m.group(1)), float(m.group(2)),
+            [tuple(map(float, a)) for a in accs])
+
+
+@pytest.fixture(scope="module")
+def runs(tmp_path_factory):
+    d = tmp_path_factory.mktemp("dist")
+    port = socket.socket()
+    port.bind(("", 0))
+    coord = f"127.0.0.1:{port.getsockname()[1]}"
+    port.close()
+
+    single = _launch(["--host-devices", "4",
+                      "--checkpoint-dir", str(d / "single")])
+    single_out = _finish(single)
+
+    common = ["--host-devices", "2", "--distributed", "--coordinator", coord,
+              "--num-processes", "2"]
+    p0 = _launch([*common, "--process-id", "0",
+                  "--checkpoint-dir", str(d / "rank0")])
+    p1 = _launch([*common, "--process-id", "1",
+                  "--checkpoint-dir", str(d / "rank1")])
+    out0, out1 = _finish(p0), _finish(p1)
+    return single_out, out0, out1, d
+
+
+def test_two_process_run_spans_global_devices(runs):
+    _, out0, out1, _ = runs
+    assert "devices=4 (2 processes, rank 0)  engine=spmd" in out0
+    assert "devices=4 (2 processes, rank 1)  engine=spmd" in out1
+
+
+def test_two_process_parity_with_single_process(runs):
+    """Acceptance: the 2-process distributed run reproduces the
+    single-process 4-device losses and per-client accuracies."""
+    single_out, out0, _, _ = runs
+    closs_s, sloss_s, accs_s = _parse(single_out)
+    closs_d, sloss_d, accs_d = _parse(out0)
+    assert abs(closs_s - closs_d) <= TOL
+    assert abs(sloss_s - sloss_d) <= TOL
+    for a, b in zip(accs_s, accs_d):
+        assert a == b, (accs_s, accs_d)
+
+
+def test_ranks_agree_with_each_other(runs):
+    _, out0, out1, _ = runs
+    assert _parse(out0) == _parse(out1)
+
+
+def test_only_the_coordinator_writes_checkpoints(runs):
+    _, _, _, d = runs
+    rank0 = sorted(os.listdir(d / "rank0"))
+    assert any(f.startswith("ckpt-") for f in rank0)
+    assert "driver.json" in rank0
+    assert not (d / "rank1").exists() or not os.listdir(d / "rank1")

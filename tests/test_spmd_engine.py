@@ -194,6 +194,30 @@ cross = TrainSession.restore(os.path.join(d, "ck3"), model, parts,
 cross.train(2, local_epochs=2)
 res["cross_recipe_resume_delta"] = max_state_delta(ref2, cross)
 
+# --- staging pipeline on vs off on the spmd engine: bit-identical over
+# chunk boundaries (chunk_rounds=3 puts an aggregate_every=2 boundary
+# round first in chunk 2), plus a mid-run checkpoint resume ---
+on = mk("spmd");  on.engine.overlap_staging = True
+on.train(6, local_epochs=2, chunk_rounds=3)
+off = mk("spmd"); off.engine.overlap_staging = False
+off.train(6, local_epochs=2, chunk_rounds=3)
+res["overlap_param_delta"] = max_state_delta(on, off)
+res["overlap_metric_delta"] = max(
+    max(abs(a.client_loss - b.client_loss),
+        abs(a.server_loss - b.server_loss))
+    for a, b in zip(on.history, off.history))
+res["overlap_stats_on"] = on.engine.last_stage_stats
+res["overlap_stats_off"] = off.engine.last_stage_stats
+
+mid = mk("spmd"); mid.engine.overlap_staging = True
+mid.train(3, local_epochs=2, chunk_rounds=2)
+mid.save(os.path.join(d, "ck_ov"))
+cont = TrainSession.restore(os.path.join(d, "ck_ov"), model, parts,
+                            engine="spmd")
+cont.engine.overlap_staging = True
+cont.train(3, local_epochs=2, chunk_rounds=2)
+res["overlap_resume_delta"] = max_state_delta(off, cont)
+
 print(json.dumps(res))
 """
 
@@ -262,6 +286,21 @@ def test_lane_fsdp_matches_reference(harness):
     aggregate_every=2 boundary."""
     assert harness["lane_param_delta"] <= TOL, harness
     assert harness["lane_metric_delta"] <= TOL, harness
+
+
+def test_spmd_overlap_pipeline_bit_identical(harness):
+    """The staging pipeline only reorders host work: the spmd trajectory
+    with the double buffer on vs off is bit-identical across chunk
+    boundaries (including the aggregate_every straddle), and a mid-run
+    checkpoint resumed under the pipeline continues the serial
+    trajectory."""
+    assert harness["overlap_param_delta"] == 0.0, harness
+    assert harness["overlap_metric_delta"] == 0.0, harness
+    assert harness["overlap_stats_on"]["overlap"] is True
+    assert harness["overlap_stats_on"]["chunks"] == 2
+    assert harness["overlap_stats_off"]["overlap"] is False
+    assert harness["overlap_stats_off"]["overlap_fraction"] == 0.0
+    assert harness["overlap_resume_delta"] <= TOL, harness
 
 
 def test_cross_recipe_resume(harness):

@@ -1,0 +1,269 @@
+"""The overlapped staging pipeline (``data/staging.py``) and its fused-
+engine integration: the double buffer must be invisible to the math —
+bit-identical trajectories with the pipeline on or off, across chunk
+boundaries, aggregate_every straddles, and mid-run checkpoint resume —
+while the budget knobs fail loudly on misconfiguration.  The spmd-engine
+half of the contract lives in tests/test_spmd_engine.py (subprocess
+4-device harness); the 2-process variant in tests/test_distributed.py.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import TrainSession
+from repro.config import HeteroProfile, OptimizerConfig, SplitEEConfig
+from repro.core.splitee import MLPSplitModel
+from repro.data.pipeline import batch_iterator, prestage_batches
+from repro.data.staging import StagedChunkPipeline, StageStats
+
+
+# ---------------------------------------------------------------------------
+# StagedChunkPipeline unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_preserves_plan_order():
+    staged = []
+
+    def stage(n):
+        staged.append(n)
+        return ("chunk", n)
+
+    plan = [3, 1, 4, 1, 5]
+    p = StagedChunkPipeline(stage, plan)
+    try:
+        got = []
+        for _ in plan:
+            got.append(p.get())
+            p.release()
+        assert got == [("chunk", n) for n in plan]
+        assert staged == plan                  # staged strictly in order
+        assert p.stats.chunks == len(plan)
+    finally:
+        p.close()
+
+
+def test_pipeline_bounds_inflight_chunks_to_depth():
+    """The producer never runs ahead of the consumer by more than
+    ``depth`` staged chunks (the staging-budget contract)."""
+    inflight = []
+    lock = threading.Lock()
+    live = [0]
+
+    def stage(n):
+        with lock:
+            live[0] += 1
+            inflight.append(live[0])
+        return n
+
+    p = StagedChunkPipeline(stage, [1] * 8, depth=2)
+    try:
+        for _ in range(8):
+            p.get()
+            time.sleep(0.01)                   # let the producer run ahead
+            with lock:
+                live[0] -= 1
+            p.release()
+        assert max(inflight) <= 2
+    finally:
+        p.close()
+
+
+def test_pipeline_depth_below_two_rejected():
+    with pytest.raises(ValueError, match="depth"):
+        StagedChunkPipeline(lambda n: n, [1, 2], depth=1)
+
+
+def test_pipeline_propagates_producer_errors():
+    def stage(n):
+        if n == 2:
+            raise RuntimeError("disk on fire")
+        return n
+
+    p = StagedChunkPipeline(stage, [1, 2, 3])
+    assert p.get() == 1
+    p.release()
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        p.get()
+    p.close()                                  # idempotent after the error
+    p.close()
+
+
+def test_pipeline_close_unblocks_parked_producer():
+    p = StagedChunkPipeline(lambda n: n, [1] * 10, depth=2)
+    assert p.get() == 1
+    p.close()
+    assert not p._thread.is_alive()
+
+
+def test_pipeline_serial_mode_stages_on_demand():
+    staged = []
+    p = StagedChunkPipeline(lambda n: staged.append(n) or n, [7, 8],
+                            overlap=False)
+    assert staged == []                        # nothing eager
+    assert p.get() == 7 and staged == [7]
+    p.release()
+    assert p.get() == 8
+    p.close()
+    assert p.stats.overlap_fraction == 0.0     # serial hides nothing
+    assert p.stats.wait_s == p.stats.stage_s
+
+
+def test_stage_stats_overlap_fraction_bounds():
+    s = StageStats(chunks=3, stage_s=2.0, wait_s=0.5)
+    assert s.overlap_fraction == pytest.approx(0.75)
+    assert StageStats().overlap_fraction == 0.0
+    assert StageStats(stage_s=1.0, wait_s=5.0).overlap_fraction == 0.0
+    d = s.as_dict()
+    assert d["chunks"] == 3 and d["overlap_fraction"] == pytest.approx(0.75)
+
+
+# ---------------------------------------------------------------------------
+# prestage_batches in-place fill
+# ---------------------------------------------------------------------------
+
+
+def test_prestage_fills_caller_buffers_in_place():
+    x = np.arange(120, dtype=np.float32).reshape(40, 3)
+    y = np.arange(40, dtype=np.int32)
+    want = prestage_batches(batch_iterator(x, y, 8, seed=3), 3, 2)
+    assert want[0].shape == (3, 2, 8, 3) and want[1].shape == (3, 2, 8)
+
+    # same draws into caller-owned (non-contiguous view) buffers
+    bx = np.empty((3, 2, 5, 8, 3), np.float32)
+    by = np.empty((3, 2, 5, 8), np.int32)
+    got = prestage_batches(batch_iterator(x, y, 8, seed=3), 3, 2,
+                           out=(bx[:, :, 2], by[:, :, 2]))
+    assert got[0].base is bx and got[1].base is by   # filled in place
+    np.testing.assert_array_equal(bx[:, :, 2], want[0])
+    np.testing.assert_array_equal(by[:, :, 2], want[1])
+
+
+# ---------------------------------------------------------------------------
+# fused-engine integration
+# ---------------------------------------------------------------------------
+
+
+def _make(engine="fused", aggregate_every=2):
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(3, 16)) * 2.0
+    y = rng.integers(0, 3, 600).astype(np.int32)
+    x = (centers[y] + rng.normal(size=(600, 16))).astype(np.float32)
+    model = MLPSplitModel(in_dim=16, hidden=32, num_classes=3, num_layers=4,
+                          seed=0)
+    parts = [(x[i::4], y[i::4]) for i in range(4)]
+    return model, parts, TrainSession.from_config(
+        model,
+        SplitEEConfig(profile=HeteroProfile((1, 2, 2, 3)),
+                      strategy="averaging", aggregate_every=aggregate_every),
+        OptimizerConfig(lr=3e-3, total_steps=60), parts, batch_size=64,
+        engine=engine)
+
+
+def _max_state_delta(a, b):
+    import jax
+
+    return max(float(np.max(np.abs(np.asarray(u, np.float64)
+                                   - np.asarray(v, np.float64))))
+               for u, v in zip(jax.tree.leaves(a.state),
+                               jax.tree.leaves(b.state)))
+
+
+def test_fused_overlap_on_off_bit_identical():
+    """Pipeline on vs off over a multi-chunk plan with chunk boundaries
+    straddling aggregate_every=2 rounds: exactly zero divergence in
+    params, opt state, and per-round metrics."""
+    _, _, on = _make()
+    _, _, off = _make()
+    on.engine.overlap_staging = True
+    off.engine.overlap_staging = False
+    # chunk_rounds=3 with aggregate_every=2: the round-3 aggregation
+    # boundary opens chunk 2
+    on.train(6, local_epochs=2, chunk_rounds=3)
+    off.train(6, local_epochs=2, chunk_rounds=3)
+    assert _max_state_delta(on, off) == 0.0
+    for a, b in zip(on.history, off.history):
+        assert (a.client_loss, a.server_loss) == (b.client_loss,
+                                                  b.server_loss)
+    assert on.engine.last_stage_stats["overlap"] is True
+    assert on.engine.last_stage_stats["chunks"] == 2
+    assert off.engine.last_stage_stats["overlap"] is False
+    assert off.engine.last_stage_stats["overlap_fraction"] == 0.0
+
+
+def test_fused_overlap_resume_from_mid_run_checkpoint(tmp_path):
+    """A checkpoint written mid-run under the pipeline resumes into the
+    serial engine's uninterrupted trajectory (and vice versa): the
+    data-cursor bookkeeping is pipeline-invariant."""
+    model, parts, serial = _make()
+    serial.engine.overlap_staging = False
+    serial.train(6, local_epochs=2, chunk_rounds=2)
+
+    _, _, mid = _make()
+    mid.engine.overlap_staging = True
+    mid.train(3, local_epochs=2, chunk_rounds=2)
+    mid.save(str(tmp_path / "ck"))
+    cont = TrainSession.restore(str(tmp_path / "ck"), model, parts,
+                                engine="fused")
+    cont.engine.overlap_staging = True
+    cont.train(3, local_epochs=2, chunk_rounds=2)
+    assert _max_state_delta(serial, cont) <= 1e-5
+
+
+def test_overlap_env_kill_switch(monkeypatch):
+    _, _, tr = _make()
+    eng = tr.engine
+    monkeypatch.setenv("REPRO_OVERLAP_STAGING", "0")
+    assert eng._overlap_enabled() is False
+    monkeypatch.setenv("REPRO_OVERLAP_STAGING", "off")
+    assert eng._overlap_enabled() is False
+    monkeypatch.setenv("REPRO_OVERLAP_STAGING", "1")
+    assert eng._overlap_enabled() is True
+    monkeypatch.delenv("REPRO_OVERLAP_STAGING")
+    eng.overlap_staging = False
+    assert eng._overlap_enabled() is False
+    tr.train(2)                                # serial path end to end
+    assert tr.engine.last_stage_stats["overlap"] is False
+
+
+def test_auto_plan_subdivides_for_the_pipeline():
+    """chunk_rounds=0 under a roomy budget used to produce one whole-run
+    chunk; with overlap on it subdivides (nothing to overlap otherwise),
+    while an explicit chunk_rounds is always honored exactly."""
+    _, _, tr = _make()
+    eng = tr.engine
+    assert eng._chunk_plan(8, 0, 1, overlap=True) == [2, 2, 2, 2]
+    assert eng._chunk_plan(8, 0, 1, overlap=False) == [8]
+    assert eng._chunk_plan(8, 3, 1, overlap=True) == [3, 3, 2]
+    assert eng._chunk_plan(1, 0, 1, overlap=True) == [1]
+    # the budget still caps chunk size before any subdivision
+    eng.stage_budget_bytes = eng._round_stage_bytes(1) * 3
+    assert eng._chunk_plan(8, 0, 1, overlap=True) == [3, 3, 2]
+
+
+# ---------------------------------------------------------------------------
+# staging-budget validation
+# ---------------------------------------------------------------------------
+
+
+def test_stage_budget_must_be_strictly_positive(monkeypatch):
+    _, _, tr = _make()
+    eng = tr.engine
+    for bad in (0, -1):
+        eng.stage_budget_bytes = bad
+        with pytest.raises(ValueError, match="stage_budget_bytes"):
+            eng._auto_chunk_rounds(4, 1)
+    eng.stage_budget_bytes = type(eng).stage_budget_bytes
+    monkeypatch.setenv("REPRO_STAGE_BUDGET_MB", "0")
+    with pytest.raises(ValueError, match="REPRO_STAGE_BUDGET_MB"):
+        eng._auto_chunk_rounds(4, 1)
+    monkeypatch.setenv("REPRO_STAGE_BUDGET_MB", "-5")
+    with pytest.raises(ValueError, match="REPRO_STAGE_BUDGET_MB"):
+        eng._auto_chunk_rounds(4, 1)
+    monkeypatch.setenv("REPRO_STAGE_BUDGET_MB", "lots")
+    with pytest.raises(ValueError, match="REPRO_STAGE_BUDGET_MB"):
+        eng._auto_chunk_rounds(4, 1)
+    monkeypatch.setenv("REPRO_STAGE_BUDGET_MB", "64")
+    assert eng._auto_chunk_rounds(4, 1) == 4   # valid values still work
