@@ -58,8 +58,10 @@ class FusedEngine(Engine):
     #: run's whole pre-staged ``[rounds, k, E, B, ...]`` tensor would exceed
     #: it, the run is split into budget-sized chunks instead of silently
     #: staging everything (full-size configs OOM before the first step
-    #: otherwise).  Override per instance, or via REPRO_STAGE_BUDGET_MB;
-    #: must be strictly positive either way.
+    #: otherwise).  The budget bounds *resident* staged data: under the
+    #: overlapped pipeline it is divided by ``pipeline_depth`` so the
+    #: staged-ahead chunks together still fit.  Override per instance, or
+    #: via REPRO_STAGE_BUDGET_MB; must be strictly positive either way.
     stage_budget_bytes: int = 1 << 30
 
     #: overlapped staging: stage chunk n+1 on a background thread (a
@@ -227,9 +229,14 @@ class FusedEngine(Engine):
             total += local_epochs * eb * per_example
         return total
 
-    def _auto_chunk_rounds(self, rounds: int, local_epochs: int) -> int:
+    def _auto_chunk_rounds(self, rounds: int, local_epochs: int,
+                           overlap: bool = False) -> int:
         """The default chunk size when the caller passed ``chunk_rounds=0``:
-        as many rounds as fit the staging budget (at least one).  An
+        as many rounds as fit the staging budget (at least one).  With
+        ``overlap`` the pipeline keeps up to ``pipeline_depth`` staged
+        chunks resident at once (one in compute plus staged-ahead), so the
+        budget is divided by the depth — resident staged data stays within
+        ``stage_budget_bytes`` instead of depth times it.  An
         explicit per-instance ``stage_budget_bytes`` wins over the
         REPRO_STAGE_BUDGET_MB environment default.  Either knob must be
         strictly positive — a zero/negative budget used to silently
@@ -254,6 +261,8 @@ class FusedEngine(Engine):
                 f"a 0/negative staging budget cannot hold even one round "
                 f"of pre-staged batches (set FusedEngine.stage_budget_bytes "
                 f"or REPRO_STAGE_BUDGET_MB to a real byte/MB count)")
+        if overlap:
+            budget //= self.pipeline_depth
         per_round = max(1, self._round_stage_bytes(local_epochs))
         return max(1, min(rounds, budget // per_round))
 
@@ -269,13 +278,14 @@ class FusedEngine(Engine):
                     local_epochs: int, overlap: bool) -> List[int]:
         """The run's chunk sizes in execution order.  An explicit
         ``chunk_rounds`` is honored exactly; the auto default is the
-        staging-budget chunk, subdivided (equal-ish, for compile-cache
+        staging-budget chunk (budget divided by ``pipeline_depth`` under
+        overlap), subdivided (equal-ish, for compile-cache
         reuse) into up to ``pipeline_min_chunks`` pieces when overlap is
         on and the budget would cover the run in one chunk — a pipeline
         with a single chunk has nothing to overlap.  Chunk boundaries
         never change the trajectory (docs/ENGINES.md, tested)."""
         chunk = (chunk_rounds if chunk_rounds > 0
-                 else self._auto_chunk_rounds(rounds, local_epochs))
+                 else self._auto_chunk_rounds(rounds, local_epochs, overlap))
         if (chunk_rounds <= 0 and overlap and chunk >= rounds
                 and rounds >= 2):
             pieces = min(self.pipeline_min_chunks, rounds)

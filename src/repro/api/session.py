@@ -30,6 +30,7 @@ import os
 import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -222,7 +223,14 @@ class TrainSession:
 
     def _save_rotating(self, save_dir: str, keep_last: int) -> None:
         """``save_dir/ckpt-<round>`` plus keep-last-``keep_last`` rotation
-        (oldest ``.npz``/``.json`` pairs beyond the budget are removed)."""
+        (oldest ``.npz``/``.json`` pairs beyond the budget are removed).
+
+        Under a multi-process (``jax.distributed``) run every rank calls
+        this — :meth:`train`'s ``save_every`` segmentation must dispatch
+        the identical jit/collective sequence on every process — but only
+        process 0 touches the shared filesystem."""
+        if jax.process_index() != 0:
+            return
         os.makedirs(save_dir, exist_ok=True)
         self.save(os.path.join(save_dir, f"ckpt-{self.round:08d}"))
         stems = sorted(p[:-5] for p in

@@ -15,8 +15,9 @@ bounded by a ``depth``-deep buffer pool (depth 2 = the classic double
 buffer: one chunk in compute, one staged ahead).  The consumer releases
 a buffer slot only once a chunk's compute results have been fetched, so
 at most ``depth`` chunks of staged data are resident at any moment —
-the engine's staging-budget contract is preserved, just double-counted
-by the pipeline depth.
+and the engine sizes its auto chunks with the staging budget divided by
+the depth (``FusedEngine._auto_chunk_rounds``), so the resident total
+stays within ``stage_budget_bytes`` rather than depth times it.
 
 Determinism: the producer stages chunks strictly in plan order through
 the *same* stage callable the serial path uses, so the ``DataCursor``
@@ -33,6 +34,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
@@ -113,7 +115,14 @@ class StagedChunkPipeline:
                     return
                 t0 = time.perf_counter()
                 chunk = self._stage_fn(n)
-                self.stats.stage_s += time.perf_counter() - t0
+                dt = time.perf_counter() - t0
+                # re-check after the (possibly long) stage_fn: once close()
+                # has cancelled us, the consumer may already be reading
+                # stats — stop mutating shared state and drawing from the
+                # session's data cursor
+                if self._cancelled.is_set():
+                    return
+                self.stats.stage_s += dt
                 self._q.put((chunk, None))
         except BaseException as e:                        # noqa: BLE001
             # surface staging failures at the consumer's next get(), with
@@ -155,3 +164,13 @@ class StagedChunkPipeline:
         self._cancelled.set()
         self._slots.release()             # unblock a producer parked on acquire
         self._thread.join(timeout=60.0)
+        if self._thread.is_alive():
+            # a stuck stage_fn: the daemon thread is still drawing from the
+            # session's DataCursor, so stats may be incomplete and the
+            # session must not run again in this process (the cursor's
+            # draw bookkeeping would be corrupted)
+            warnings.warn(
+                "staged-chunk producer thread did not exit within 60s "
+                "(stage_fn stuck?); staging stats may be incomplete and "
+                "this session is unsafe to reuse until the thread dies",
+                RuntimeWarning, stacklevel=2)

@@ -72,6 +72,32 @@ def _truthy(v: Optional[str]) -> bool:
                                                        "off", "no")
 
 
+def _int_option(flag: str, env: str, argv: Sequence[str]) -> Optional[int]:
+    """An integer launch option from argv (preferred) or the ``env``
+    fallback.  A malformed argv value resolves to ``None`` — argparse
+    parses the same flag later and produces the canonical error — but a
+    malformed env var raises here: nothing else ever looks at it, and
+    silently dropping it would send ``jax.distributed.initialize`` into
+    cluster auto-detection, which fails or hangs with no hint of the
+    real cause."""
+    v = _argv_value(flag, argv)
+    if v is not None:
+        try:
+            return int(v)
+        except ValueError:
+            return None
+    v = os.environ.get(env)
+    if v is None or not v.strip():
+        return None
+    try:
+        return int(v)
+    except ValueError:
+        raise ValueError(
+            f"{env}={v!r} is not an integer (fix or unset it; a dropped "
+            f"value would fall back to jax cluster auto-detection)"
+        ) from None
+
+
 def resolve_options(argv: Optional[Sequence[str]] = None
                     ) -> DistributedOptions:
     """The launch's :class:`DistributedOptions` from argv flags, with
@@ -80,21 +106,13 @@ def resolve_options(argv: Optional[Sequence[str]] = None
     argv = sys.argv if argv is None else argv
     coord = (_argv_value("--coordinator", argv)
              or os.environ.get("REPRO_COORDINATOR"))
-    nproc = (_argv_value("--num-processes", argv)
-             or os.environ.get("REPRO_NUM_PROCESSES"))
-    pid = (_argv_value("--process-id", argv)
-           or os.environ.get("REPRO_PROCESS_ID"))
+    nproc = _int_option("--num-processes", "REPRO_NUM_PROCESSES", argv)
+    pid = _int_option("--process-id", "REPRO_PROCESS_ID", argv)
     enabled = ("--distributed" in argv
                or _truthy(os.environ.get("REPRO_DISTRIBUTED"))
                or coord is not None)
-    try:
-        return DistributedOptions(
-            enabled=enabled, coordinator=coord,
-            num_processes=None if nproc is None else int(nproc),
-            process_id=None if pid is None else int(pid))
-    except ValueError:
-        # malformed numbers: let argparse produce the real error message
-        return DistributedOptions(enabled=enabled, coordinator=coord)
+    return DistributedOptions(enabled=enabled, coordinator=coord,
+                              num_processes=nproc, process_id=pid)
 
 
 def setup_from_argv(argv: Optional[Sequence[str]] = None

@@ -343,9 +343,14 @@ def main() -> None:
           + (f"  [resumed at round {session.round}]" if resumed else ""))
 
     # checkpoints and sidecars are shared-filesystem side effects: only
-    # the coordinator process writes them (every process still restores)
-    ckpt_dir = args.checkpoint_dir if coordinator else ""
-    if ckpt_dir:
+    # the coordinator process writes them (every process still restores).
+    # Every rank still runs the identical save_every segmentation below —
+    # each engine.run() segment dispatches the same jit/collective
+    # sequence on every process (chunk plans, the spmd carry fetch), so
+    # ranks must not diverge in how the run is cut up; the file write
+    # itself is gated on process 0 inside TrainSession._save_rotating.
+    ckpt_dir = args.checkpoint_dir
+    if ckpt_dir and coordinator:
         os.makedirs(ckpt_dir, exist_ok=True)
         with open(os.path.join(ckpt_dir, "driver.json"), "w") as f:
             json.dump(driver_knobs(args, splits), f, indent=1)
@@ -356,7 +361,7 @@ def main() -> None:
               f"--rounds {args.rounds}; nothing to train")
     else:
         # no --save-every but a checkpoint dir: save once at completion
-        # (non-coordinator ranks never save, whatever the flags say)
+        # (same segmentation on every rank; only process 0 writes files)
         save_every = (args.save_every or remaining) if ckpt_dir else 0
         t0 = time.time()
         session.train(remaining, local_epochs=args.local_epochs,
@@ -370,7 +375,7 @@ def main() -> None:
               f"({remaining / dt:.2f} rounds/s)  "
               f"client_loss {m.client_loss:.4f}  "
               f"server_loss {m.server_loss:.4f}")
-        if ckpt_dir:
+        if ckpt_dir and coordinator:
             print(f"checkpoints -> {ckpt_dir} "
                   f"(newest: round {session.round})")
 

@@ -54,6 +54,27 @@ def test_resolve_options_env_fallbacks(monkeypatch):
     assert not resolve_options(["prog"]).enabled
 
 
+def test_resolve_options_malformed_env_raises(monkeypatch):
+    """A malformed REPRO_NUM_PROCESSES/REPRO_PROCESS_ID must fail loudly:
+    argparse never sees env vars, and silently dropping the value sends
+    jax.distributed into cluster auto-detection (hangs or fails with no
+    hint of the real cause).  Malformed *argv* values still defer to
+    argparse, which owns the canonical error message."""
+    monkeypatch.setenv("REPRO_NUM_PROCESSES", "two")
+    with pytest.raises(ValueError, match="REPRO_NUM_PROCESSES"):
+        resolve_options(["prog"])
+    monkeypatch.setenv("REPRO_NUM_PROCESSES", "2")
+    monkeypatch.setenv("REPRO_PROCESS_ID", "zero")
+    with pytest.raises(ValueError, match="REPRO_PROCESS_ID"):
+        resolve_options(["prog"])
+    monkeypatch.delenv("REPRO_PROCESS_ID")
+    # argv-sourced garbage is argparse's to report, not ours
+    o = resolve_options(["prog", "--num-processes", "nope"])
+    assert o.num_processes is None
+    # a malformed argv value must not mask a good env fallback's sibling
+    assert resolve_options(["prog", "--process-id=bad"]).num_processes == 2
+
+
 def test_setup_appends_xla_flags_once(monkeypatch):
     monkeypatch.setenv("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
     assert setup_from_argv(["prog"]).enabled is False

@@ -292,6 +292,28 @@ def test_save_every_requires_save_dir():
         sess.train(2, save_every=1)
 
 
+def test_save_rotating_gated_on_process_zero(tmp_path, monkeypatch):
+    """Under a multi-process run every rank executes the save_every
+    segmentation (identical dispatch per segment) but only process 0
+    writes checkpoint files — a non-coordinator rank trains through the
+    same segments and leaves the directory untouched."""
+    import repro.api.session as session_mod
+
+    rank0, *_ = _mlp_session(engine="fused")
+    rank1, *_ = _mlp_session(engine="fused")
+    d0, d1 = os.path.join(tmp_path, "r0"), os.path.join(tmp_path, "r1")
+
+    rank0.train(4, save_every=2, save_dir=d0)
+    monkeypatch.setattr(session_mod.jax, "process_index", lambda: 1)
+    rank1.train(4, save_every=2, save_dir=d1)
+    monkeypatch.undo()
+
+    assert sorted(os.listdir(d0))                    # coordinator wrote
+    assert not os.path.exists(d1)                    # rank 1 wrote nothing
+    # ... and trained the exact same trajectory through the segments
+    _assert_states_close(rank0.state, rank1.state, atol=0.0)
+
+
 @pytest.mark.parametrize("engine", ["reference", "fused"])
 def test_resume_equivalence(engine, tmp_path):
     """train 2k rounds == train k, save, restore, train k — on params, Adam

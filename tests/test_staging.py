@@ -238,9 +238,14 @@ def test_auto_plan_subdivides_for_the_pipeline():
     assert eng._chunk_plan(8, 0, 1, overlap=False) == [8]
     assert eng._chunk_plan(8, 3, 1, overlap=True) == [3, 3, 2]
     assert eng._chunk_plan(1, 0, 1, overlap=True) == [1]
-    # the budget still caps chunk size before any subdivision
-    eng.stage_budget_bytes = eng._round_stage_bytes(1) * 3
+    # the budget still caps chunk size before any subdivision; under
+    # overlap it is divided by pipeline_depth (default 2) so the depth
+    # resident chunks *together* stay within stage_budget_bytes
+    eng.stage_budget_bytes = eng._round_stage_bytes(1) * 6
     assert eng._chunk_plan(8, 0, 1, overlap=True) == [3, 3, 2]
+    assert eng._chunk_plan(8, 0, 1, overlap=False) == [6, 2]
+    assert eng._auto_chunk_rounds(8, 1, overlap=True) == 3
+    assert eng._auto_chunk_rounds(8, 1) == 6
 
 
 # ---------------------------------------------------------------------------
